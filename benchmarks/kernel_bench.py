@@ -1,0 +1,73 @@
+"""Kernel microbenchmarks: us/call for the Pallas kernels vs jnp refs.
+
+On this CPU container the Pallas numbers are *interpreter* timings
+(functional only — the TPU target compiles natively); the jnp-ref rows are
+the meaningful CPU timings.  Both are reported so the harness shape is
+complete.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.ops import flash_attention, lut_lookup, masked_matmul
+
+Row = tuple[str, float, str]
+
+
+def _bench(fn, *args, iters=20, warmup=3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def kernel_rows() -> list[Row]:
+    rows: list[Row] = []
+    key = jax.random.PRNGKey(0)
+
+    # lut_lookup: a 64-neuron LogicNets layer at inference batch 256
+    b, n_in, n_out, fi, bw = 256, 64, 64, 3, 2
+    codes = jax.random.randint(key, (b, n_in), 0, 2 ** bw, dtype=jnp.int32)
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(np.stack([
+        np.sort(rng.choice(n_in, fi, replace=False))
+        for _ in range(n_out)]).astype(np.int32))
+    table = jax.random.randint(key, (n_out, 2 ** (fi * bw)), 0, 2 ** bw,
+                               dtype=jnp.int32)
+    jref = jax.jit(lambda c: ref.lut_lookup_ref(c, idx, table, bw))
+    rows.append(("kernel/lut_lookup_ref_jnp", _bench(jref, codes),
+                 f"batch={b} neurons={n_out}"))
+    rows.append(("kernel/lut_lookup_pallas_interp",
+                 _bench(lambda c: lut_lookup(c, idx, table, bw), codes,
+                        iters=3, warmup=1), "interpret-mode timing"))
+
+    # masked_matmul: LogicNet-FFN shape
+    m, k, n = 512, 512, 2048
+    x = jax.random.normal(key, (m, k), jnp.float32)
+    w = jax.random.normal(key, (k, n), jnp.float32)
+    mask = (jax.random.uniform(key, (k, n)) > 0.9).astype(jnp.float32)
+    jref = jax.jit(lambda a: ref.masked_matmul_ref(a, w, mask))
+    rows.append(("kernel/masked_matmul_ref_jnp", _bench(jref, x),
+                 f"{m}x{k}x{n}"))
+    rows.append(("kernel/masked_matmul_pallas_interp",
+                 _bench(lambda a: masked_matmul(a, w, mask), x, iters=3,
+                        warmup=1), "interpret-mode timing"))
+
+    # flash attention: 2k prefill slice
+    bq, hq, hkv, s, d = 1, 8, 2, 1024, 64
+    q = jax.random.normal(key, (bq, hq, s, d), jnp.bfloat16)
+    kk = jax.random.normal(key, (bq, hkv, s, d), jnp.bfloat16)
+    v = jax.random.normal(key, (bq, hkv, s, d), jnp.bfloat16)
+    jref = jax.jit(lambda a: ref.flash_attention_ref(a, kk, v, causal=True))
+    rows.append(("kernel/flash_attention_ref_jnp", _bench(jref, q, iters=5),
+                 f"S={s} Hq={hq} GQA"))
+    return rows

@@ -1,0 +1,336 @@
+"""Assemble EXPERIMENTS.md: replace the <!-- --> markers with tables
+generated from the dry-run artifacts.  Idempotent (markers are kept as
+section anchors, content between marker and next blank-marker boundary is
+regenerated)."""
+
+from __future__ import annotations
+
+import json
+import re
+
+from benchmarks import perf_report, roofline
+
+SUGGEST = {
+    ("train", "memory"): ("activation traffic dominates: larger fused "
+                          "blocks (TPU backend fuses far better than the "
+                          "CPU pipeline measured here), remat='dots' to "
+                          "stop recomputing matmuls, bf16 master grads"),
+    ("train", "collective"): ("gradient sync: constrain grads to the "
+                              "sharded param layout (reduce-scatter, not "
+                              "all-reduce) and overlap with backward"),
+    ("train", "compute"): ("MXU-bound: raise per-chip batch or drop remat"),
+    ("prefill", "memory"): ("KV/activation streaming: bigger attention "
+                            "chunks amortize q-block rewrites; keep logits "
+                            "last-position-only (done)"),
+    ("prefill", "collective"): ("all-gather of FSDP weights per layer: "
+                                "prefetch next layer's gather during "
+                                "current compute"),
+    ("prefill", "compute"): ("compute-bound: good place to be at 32k"),
+    ("decode", "memory"): ("cache traffic: dynamic_update_slice cache "
+                           "write (variant 'dus') instead of whole-cache "
+                           "blend; int8 KV is the next lever"),
+    ("decode", "collective"): ("replicated small-kv attention all-reduces: "
+                               "shard cache on sequence for batch-1 cells"),
+    ("decode", "compute"): ("compute-bound decode is rare; check "
+                            "speculative decoding"),
+}
+
+# expect: 'down' (dominant term predicted to fall), 'neutral' (predicted
+# within ~10%), 'regression' (predicted to get worse — recorded on purpose)
+HILLCLIMBS = [
+    {
+        "arch": "qwen3-moe-235b-a22b", "shape": "train_4k",
+        "title": "HC1 — qwen3-moe-235b x train_4k (flagship scale; "
+                 "paper-era GShard dispatch is the waste)",
+        "variants": ["moe_sorted", "moe_sorted_gradrs", "dots",
+                     "moe_sorted_local", "moe_sorted_local_dots"],
+        "expect": {"moe_sorted": "down", "moe_sorted_gradrs": "down",
+                   "dots": "down", "moe_sorted_local": "down",
+                   "moe_sorted_local_dots": "down"},
+        "metric": {"dots": "compute_s"},
+        "hypotheses": [
+            ("moe_sorted",
+             "H1: dense one-hot dispatch+combine einsums cost "
+             "~2·(E·C)/(3k·d_ff) ≈ 0.56x of expert FLOPs per MoE layer "
+             "(E·C=10240, k=8, d_ff=1536) plus the (G,S,E,C) tensor "
+             "traffic; sort-based ragged dispatch removes both. Predict "
+             "compute −25–35%, memory −15–30%.  **Measured: REFUTED — "
+             "compute −11%, but memory 4.7x and collectives 9.6x worse.** "
+             "Root cause (debugged forward, not reverted): the GLOBAL "
+             "argsort over 1M (token,k) pairs forces XLA to reshard the "
+             "entire token stream across the mesh; sorting is not "
+             "shard-local.  Lesson -> H1b."),
+            ("moe_sorted_local",
+             "H1b: keep the dense path's 1024-token groups (resident on "
+             "their data shard) and sort *within* groups — collective "
+             "pattern identical to dense, one-hot einsums gone. Predict "
+             "compute −15–30% vs baseline with memory/collectives ~flat. "
+             "**Measured: REFUTED again** — per-type breakdown localizes "
+             "it: GSPMD lowers the in-group scatter-add into "
+             "partial-scatter + **all-reduce of the whole expert slab** "
+             "(all-reduce 5x, slab all-to-all 21x baseline).  Lesson: "
+             "under *automatic* partitioning, one-hot einsum dispatch is "
+             "the right choice because einsums partition cleanly; ragged "
+             "dispatch needs shard_map with explicit all_to_all (manual "
+             "collectives), which we record as the next step rather than "
+             "ship a regression.  The paper-era dense dispatch baseline "
+             "stands."),
+            ("moe_sorted_gradrs",
+             "H2: constraining grads to the sharded param layout should "
+             "turn a 2x-wire all-reduce into reduce-scatter. Predict "
+             "collective −40–55%.  **Measured: REFUTED (no-op)** — the "
+             "partitioner already reduce-scatters FSDP param grads; the "
+             "surviving all-reduces are the TP activation-grad syncs, "
+             "which are structural to tensor parallelism (sequence "
+             "parallelism is the known next lever; future work)."),
+            ("dots",
+             "H3: full remat recomputes the whole forward in backward "
+             "(~8·N·D vs 6·N·D); checkpoint_dots keeps matmul outputs. "
+             "Predict compute −15–25%, peak memory up.  Measured: compute "
+             "−23% **confirmed**, useful 0.42→0.55 — but the saved "
+             "activations re-read in backward push the *memory* term up "
+             "63%, and this cell is memory-bound: full remat is the "
+             "better end-to-end policy here (recompute is cheaper than "
+             "traffic).  Split verdict, recorded."),
+            ("moe_sorted_local_dots", "H1b + H3 combined."),
+        ],
+    },
+    {
+        "arch": "gemma3-27b", "shape": "train_4k",
+        "title": "HC2 — gemma3-27b x train_4k (most collective-bound "
+                 "baseline)",
+        "variants": ["gradrs", "gradrs_dots", "noremat", "tp_only"],
+        "expect": {"gradrs": "down", "gradrs_dots": "down",
+                   "noremat": "down", "tp_only": "regression"},
+        "metric": {"noremat": "compute_s", "gradrs_dots": "compute_s"},
+        "hypotheses": [
+            ("gradrs", "H4: reduce-scatter argument as H2 on a dense 27B "
+                       "model. **Measured: REFUTED (no-op), same root "
+                       "cause as H2** — XLA already optimal on param "
+                       "grads; dominant all-reduce is TP activation-grad "
+                       "sync (~28 layers x B·S·d/16)."),
+            ("gradrs_dots", "H5: checkpoint_dots; predict compute −15–25% "
+                            "at higher memory traffic (saved activations "
+                            "re-read in backward)."),
+            ("noremat",
+             "H14: this cell peaks at 2.4 GiB/chip under full remat — "
+             "13+ GiB of HBM headroom means recomputation buys nothing. "
+             "Predict remat=none cuts the compute term 20–25% (backward "
+             "no longer replays forward) and lifts useful-compute toward "
+             "0.9.  Measured: compute −19%, useful 0.74→0.91, collective "
+             "−12% — **confirmed** on the backend-portable metrics.  The "
+             "'bytes accessed' term *rises* because the XLA-CPU pipeline "
+             "counts every saved-activation read at fusion granularity it "
+             "does not have — flagged as a measurement artifact (the TPU "
+             "backend fuses these); on real hardware no-remat with "
+             "headroom is the standard MFU win."),
+            ("tp_only", "H6 (planned refutation): pure TP replicates "
+                        "weights+optimizer over the data axis — predicted "
+                        "to blow past 16 GB/chip peak; recorded to show "
+                        "why fsdp_tp is the default policy.  Measured: "
+                        "peak 2.4 -> 37.7 GiB/chip, terms ~flat: "
+                        "**confirmed (regression as predicted)** — "
+                        "fsdp_tp stays the default."),
+        ],
+    },
+    {
+        "arch": "qwen3-1.7b", "shape": "train_4k",
+        "title": "HC3 — qwen3-1.7b x train_4k + LogicNet-FFN (the paper's "
+                 "technique cell)",
+        "variants": ["logicnet_ffn", "logicnet_ffn_shardmask",
+                     "logicnet_ffn_noremat", "noremat"],
+        "expect": {"logicnet_ffn": "neutral",
+                   "logicnet_ffn_shardmask": "neutral",
+                   "logicnet_ffn_noremat": "down", "noremat": "down"},
+        "metric": {"logicnet_ffn_noremat": "compute_s",
+                   "noremat": "compute_s"},
+        "hypotheses": [
+            ("logicnet_ffn",
+             "H7: the paper's per-neuron fan-in masks price *LUTs*, not "
+             "MXU FLOPs — the masked matmul is a dense matmul with a "
+             "free elementwise mask; activation fake-quant is cheap VPU "
+             "work. Predict roofline terms within ~10% of the dense "
+             "baseline: the technique is roofline-neutral at LM scale "
+             "while enabling truth-table conversion of narrow heads.  "
+             "Measured: terms confirmed neutral, BUT peak memory 0.3 -> "
+             "16.1 GiB/chip — the masks replicated (they matched the "
+             "'small tensors replicate' default rule).  Lesson -> H7b."),
+            ("logicnet_ffn_shardmask",
+             "H7b: shard masks exactly like the weights they gate "
+             "(P(fsdp, tp)). Predict peak memory back to ~baseline with "
+             "terms unchanged."),
+            ("logicnet_ffn_noremat",
+             "H9: H14's no-remat argument on the technique cell (peak "
+             "0.37 GiB/chip — massive headroom). Predict compute −15–25% "
+             "with useful toward 0.7+.  Measured: compute −19%, useful "
+             "0.58→0.72 — **confirmed**; combined with the shard-mask "
+             "fix this is the production LogicNet-FFN configuration."),
+            ("noremat",
+             "H14 control on the dense cell: same no-remat win without "
+             "the technique (compute −19%, useful 0.59→0.72) — the "
+             "paper's sparsity+QAT remains roofline-neutral relative to "
+             "this optimized dense baseline as well."),
+        ],
+    },
+    {
+        "arch": "qwen3-1.7b", "shape": "decode_32k",
+        "title": "HC4 (bonus) — qwen3-1.7b x decode_32k (memory-bound "
+                 "decode)",
+        "variants": ["dus", "dus_seqshard"],
+        "expect": {"dus": "down", "dus_seqshard": "down"},
+        "metric": {"dus": "memory_s", "dus_seqshard": "peak_bytes"},
+        "hypotheses": [
+            ("dus",
+             "H10: the baseline one-hot cache blend reads+writes the "
+             "whole 32k KV cache every token (~3x cache bytes incl. the "
+             "attention read); dynamic_update_slice writes one token. "
+             "Predict memory term −50–70%, leaving the attention "
+             "cache-read as the floor."),
+            ("dus_seqshard",
+             "H12: kv_heads=8 < TP degree 16 replicated the cache "
+             "(baseline peak 56 GiB/chip — would NOT fit 16 GB v5e HBM: "
+             "the baseline is compile-able but not deployable). Sharding "
+             "the cache sequence dim over the model axis is always "
+             "divisible; decode attention becomes partial-softmax + "
+             "all-reduce. Objective is *feasibility*: predict peak "
+             "~/16 on the cache share with roughly term-neutral traffic "
+             "(the partial-softmax combine adds some). This is the "
+             "deployable decode config."),
+        ],
+    },
+    {
+        "arch": "qwen3-moe-235b-a22b", "shape": "decode_32k",
+        "title": "HC4b — qwen3-moe-235b x decode_32k (same fixes at "
+                 "scale)",
+        "variants": ["dus", "dus_seqshard"],
+        "expect": {"dus": "down", "dus_seqshard": "down"},
+        "metric": {"dus": "memory_s", "dus_seqshard": "peak_bytes"},
+        "hypotheses": [("dus", "H11: as H10."),
+                       ("dus_seqshard", "H13: as H12 (baseline peak "
+                                        "97.5 GiB/chip -> fits after).")],
+    },
+]
+
+
+def perf_log() -> str:
+    out = []
+    for hc in HILLCLIMBS:
+        rows = perf_report.compare(hc["arch"], hc["shape"], hc["variants"])
+        out.append(f"### {hc['title']}\n")
+        for name, text in hc["hypotheses"]:
+            out.append(f"* **{name}** — {text}")
+        out.append("")
+        out.append(perf_report.markdown(rows))
+        # verdicts against pre-registered expectations
+        if rows:
+            base = rows[0]
+            for r in rows[1:]:
+                dom = base["dominant"]
+                delta = (r[f"{dom}_s"] - base[f"{dom}_s"]) \
+                    / max(base[f"{dom}_s"], 1e-12) * 100
+                peak_b = (base.get("peak_bytes") or 0) / 2 ** 30
+                peak_v = (r.get("peak_bytes") or 0) / 2 ** 30
+                expect = hc.get("expect", {}).get(r["variant"], "down")
+                metric = hc.get("metric", {}).get(r["variant"])
+                if metric:  # verdict keyed on a specific term
+                    mv = r.get(metric) or 0
+                    mb = base.get(metric) or 0
+                    mdelta = (mv - mb) / max(mb, 1e-12) * 100
+                else:
+                    mdelta = delta
+                if expect == "down":
+                    verdict = ("**confirmed**" if mdelta < -5 else
+                               ("**refuted**" if mdelta > 5 else "neutral"))
+                    if metric:
+                        verdict += f" ({metric} {mdelta:+.1f}%)"
+                elif expect == "neutral":
+                    verdict = ("**confirmed (neutral as predicted)**"
+                               if abs(delta) <= 12 else "**refuted**")
+                else:  # regression expected
+                    verdict = ("**confirmed (regression as predicted)**"
+                               if peak_v > peak_b * 2 or delta > 5
+                               else "**refuted**")
+                out.append(
+                    f"* measured `{r['variant']}`: baseline-dominant "
+                    f"({dom}) {delta:+.1f}%, peak "
+                    f"{peak_b:.1f}→{peak_v:.1f} GiB/chip, roofline frac "
+                    f"x{r['roofline_fraction'] / max(base['roofline_fraction'], 1e-12):.2f} -> {verdict}")
+        out.append("")
+    return "\n".join(out)
+
+
+def perf_summary() -> str:
+    """Scored per metric: the CPU-measured memory term is an upper bound
+    (see §Roofline caveats), so the portable score axes are the compute
+    term / useful-compute ratio and deployability (peak HBM)."""
+    lines = ["| hillclimb cell | compute s: base → best (variant) "
+             "| useful: base → best | peak GiB: base → best (variant) |",
+             "|" + "---|" * 3]
+    for hc in HILLCLIMBS:
+        rows = perf_report.compare(hc["arch"], hc["shape"], hc["variants"])
+        if not rows:
+            continue
+        base = rows[0]
+        # exclude planned regressions from "best"
+        cand = [r for r in rows
+                if hc.get("expect", {}).get(r["variant"]) != "regression"]
+        bc = min(cand, key=lambda r: r["compute_s"])
+        bu = max(cand, key=lambda r: r["useful_ratio"])
+        bp = min(cand, key=lambda r: (r.get("peak_bytes") or 1e18))
+        lines.append(
+            f"| {hc['arch']} x {hc['shape']} "
+            f"| {base['compute_s']:.3g} → {bc['compute_s']:.3g} "
+            f"({bc['variant']}, "
+            f"{(bc['compute_s']/base['compute_s']-1)*100:+.0f}%) "
+            f"| {base['useful_ratio']:.2f} → {bu['useful_ratio']:.2f} "
+            f"| {(base.get('peak_bytes') or 0)/2**30:.1f} → "
+            f"{(bp.get('peak_bytes') or 0)/2**30:.1f} ({bp['variant']}) |")
+    return "\n".join(lines)
+
+
+def roofline_notes() -> str:
+    rows = [r for r in roofline.full_table(variant="baseline")
+            if r.get("status") == "ok" and r.get("mesh") == "16x16"]
+    out = []
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        sug = SUGGEST.get((r["kind"], r["dominant"]), "")
+        out.append(f"* **{r['arch']} × {r['shape']}** — bound by "
+                   f"**{r['dominant']}** "
+                   f"(MODEL_FLOPS={r['model_flops_global']:.2e}, "
+                   f"useful={r['useful_ratio']:.2f}); to move it: {sug}.")
+    return "\n".join(out)
+
+
+MARKERS = {
+    "DRYRUN_TABLE_16x16": lambda: roofline.dryrun_markdown(mesh="16x16"),
+    "DRYRUN_TABLE_2x16x16": lambda: roofline.dryrun_markdown(
+        mesh="2x16x16"),
+    "ROOFLINE_TABLE": lambda: roofline.markdown_table(
+        [r for r in roofline.full_table(variant="baseline")
+         if r.get("mesh") == "16x16" or r.get("status") != "ok"]),
+    "ROOFLINE_NOTES": roofline_notes,
+    "PERF_LOG": perf_log,
+    "PERF_SUMMARY": perf_summary,
+}
+
+
+def main() -> None:
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    for name, fn in MARKERS.items():
+        marker = f"<!-- {name} -->"
+        begin = f"<!-- BEGIN {name} -->"
+        end = f"<!-- END {name} -->"
+        block = f"{begin}\n{fn()}\n{end}"
+        if begin in text:
+            text = re.sub(re.escape(begin) + r".*?" + re.escape(end),
+                          block, text, flags=re.S)
+        else:
+            text = text.replace(marker, block)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md assembled")
+
+
+if __name__ == "__main__":
+    main()

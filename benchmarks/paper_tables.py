@@ -1,0 +1,336 @@
+"""One benchmark per paper table (deliverable d).
+
+Each function returns a list of CSV rows (name, us_per_call, derived).
+Training rows use synthetic stand-ins for FPGA4HEP/MNIST (offline
+container, DESIGN.md §6): LUT-cost columns are exact; accuracy columns
+validate *trends* (bit-width up -> acc up; iterative >= a-priori; skips
+free), not absolute paper numbers.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import fpga4hep, mnist as mnist_cfg
+from repro.core import logicnet as LN
+from repro.core import lut_cost as LC
+from repro.core.train import auc_roc_ovr, train_logicnet
+from repro.core.truth_table import (generate_sparse_linear_table,
+                                    minimized_lut_estimate)
+from repro.core import layers as L
+from repro.core.quantize import QuantizerCfg
+from repro.data import jet_substructure_data, mnist_like_data
+
+Row = tuple[str, float, str]
+
+
+def _timed(fn, *a, **kw):
+    t0 = time.perf_counter()
+    out = fn(*a, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+# ---------------------------------------------------------------------------
+
+def table_2_1() -> list[Row]:
+    """Static mapping cost to 6:1 LUTs (exact reproduction)."""
+    rows = []
+    expect = {6: 1, 7: 3, 8: 5, 9: 11, 10: 21, 11: 43}
+    for f, n in expect.items():
+        r, us = _timed(LC.static_mapping_row, f)
+        ok = r.n_6luts == n
+        rows.append((f"table2.1/fanin{f}", us,
+                     f"n6luts={r.n_6luts} expected={n} "
+                     f"util={r.pct_utilized:.2f}% exact={ok}"))
+    return rows
+
+
+def table_5_1() -> list[Row]:
+    """Truth-table generation size/time vs fan-in bits (paper: 15-20b)."""
+    rows = []
+    for bits in (8, 12, 16):
+        fan_in, bw = bits // 2, 2
+        cfg = L.SparseLinearCfg(in_features=max(fan_in * 2, 16),
+                                out_features=1, fan_in=fan_in, bw_in=bw)
+        layer = L.sparse_linear_init(cfg, jax.random.PRNGKey(0))
+        (tt), us = _timed(generate_sparse_linear_table, cfg, layer,
+                          QuantizerCfg(bw))
+        from repro.core.netlist import build_netlist
+        from repro.core.verilog import generate_verilog
+        nl = build_netlist([tt], cfg.in_features)
+        files = generate_verilog(nl)
+        vsize = sum(len(t) for t in files.values()) / 1e6
+        rows.append((f"table5.1/{bits}bit", us,
+                     f"verilog_mb={vsize:.3f} entries={tt.n_entries}"))
+    return rows
+
+
+def table_5_2(budget: int = 300) -> list[Row]:
+    """Analytical LUT cost vs post-'synthesis' estimate.
+
+    Vivado is unavailable offline; the minimization proxy (constant bits,
+    duplicate neurons, dead inputs) is a *lower* bound on what synthesis
+    finds, reported in the paper's (analytical, synthesized, reduction)
+    format.
+    """
+    x, y = jet_substructure_data(4000, seed=1)
+    rows = []
+    for name in ("C", "E"):
+        cfg = fpga4hep.MODELS[name]()
+        res = train_logicnet(cfg, x[:3500], y[:3500], x[3500:], y[3500:],
+                             method="apriori", steps=budget)
+        tables = LN.generate_tables(cfg, res.model)
+        analytical = sum(cfg.luts()[:len(tables)])
+        t0 = time.perf_counter()
+        minimized = sum(minimized_lut_estimate(t) for t in tables)
+        us = (time.perf_counter() - t0) * 1e6
+        red = analytical / max(minimized, 1)
+        rows.append((f"table5.2/model{name}", us,
+                     f"analytical={analytical} minimized={minimized} "
+                     f"reduction={red:.2f}x"))
+    return rows
+
+
+def table_6_1() -> list[Row]:
+    """Model descriptions A-E: per-layer analytical LUTs (exact columns)."""
+    expected = {
+        "A": [2112, 2112, 2112], "B": [4224, 2112, 1056],
+        "C": [128, 64, 64], "D": [2688, 1344, 1344, 3400],
+        "E": [640, 640, 640, 200],
+    }
+    rows = []
+    for name, fn in fpga4hep.MODELS.items():
+        cfg = fn()
+        luts, us = _timed(cfg.luts)
+        want = expected[name]
+        got = luts[:len(want)]
+        rows.append((f"table6.1/model{name}", us,
+                     f"luts={got} expected={want} exact={got == want}"))
+    return rows
+
+
+def table_6_2(budget: int = 300) -> list[Row]:
+    """JSC classification: AUC-ROC + total LUTs per model (A-E)."""
+    x, y = jet_substructure_data(6000, seed=0)
+    xt, yt, xv, yv = x[:5000], y[:5000], x[5000:], y[5000:]
+    rows = []
+    for name, fn in fpga4hep.MODELS.items():
+        cfg = fn()
+        t0 = time.perf_counter()
+        res = train_logicnet(cfg, xt, yt, xv, yv, method="apriori",
+                             steps=budget)
+        us = (time.perf_counter() - t0) * 1e6 / budget
+        aucs = auc_roc_ovr(cfg, res.model, xv, yv)
+        avg = float(np.nanmean(list(aucs.values()))) * 100
+        rows.append((f"table6.2/model{name}", us,
+                     f"avg_auc={avg:.2f} acc={res.accuracy:.3f} "
+                     f"luts={cfg.total_luts()}"))
+    return rows
+
+
+def table_6_3(budget: int = 300) -> list[Row]:
+    """A-priori fixed sparsity vs iterative pruning (JSC)."""
+    x, y = jet_substructure_data(6000, seed=2)
+    xt, yt, xv, yv = x[:5000], y[:5000], x[5000:], y[5000:]
+    rows = []
+    for name in ("C", "E"):
+        cfg = fpga4hep.MODELS[name]()
+        accs = {}
+        for method in ("apriori", "iterative"):
+            # thesis: iterative pruning "takes about 10x longer to train";
+            # 2x here keeps the comparison honest on a small budget.
+            res = train_logicnet(cfg, xt, yt, xv, yv, method=method,
+                                 steps=budget * (2 if method == "iterative"
+                                                 else 1), seed=3)
+            aucs = auc_roc_ovr(cfg, res.model, xv, yv)
+            accs[method] = float(np.nanmean(list(aucs.values()))) * 100
+        rows.append((f"table6.3/model{name}", 0.0,
+                     f"apriori={accs['apriori']:.2f} "
+                     f"iterative={accs['iterative']:.2f}"))
+    return rows
+
+
+def _mnist_data(n_train=4000, n_test=800):
+    x, y = mnist_like_data(n_train + n_test, seed=0)
+    x = x.reshape(len(x), -1)
+    # Center: pixels are in [0,1]; a 1-bit QuantHardTanh input quantizer
+    # thresholds at 0, so uncentered images would quantize to a constant.
+    x = (x - x.mean()) / (x.std() + 1e-6)
+    return x[:n_train], y[:n_train], x[n_train:], y[n_train:]
+
+
+def table_7_1(budget: int = 250) -> list[Row]:
+    """MNIST MLP width/depth sweep: LUTs vs accuracy."""
+    xt, yt, xv, yv = _mnist_data()
+    rows = []
+    for hidden, bw, fan_in in [((512,), 2, 6), ((1024,), 2, 5),
+                               ((512, 512), 2, 6),
+                               ((1024, 1024), 2, 5),
+                               ((512, 512, 512), 2, 6)]:
+        cfg = mnist_cfg.mlp(hidden, bw, fan_in)
+        res = train_logicnet(cfg, xt, yt, xv, yv, method="apriori",
+                             steps=budget, lr=5e-3)
+        tag = "x".join(map(str, hidden))
+        rows.append((f"table7.1/{tag}_bw{bw}_x{fan_in}", 0.0,
+                     f"acc={res.accuracy:.4f} luts={cfg.total_luts()}"))
+    return rows
+
+
+def fig_7_2_bitwidth(budget: int = 250) -> list[Row]:
+    """Accuracy vs bit-width (Fig 7.2/6.8): bw 1->2 helps, 2->3 less."""
+    xt, yt, xv, yv = _mnist_data()
+    rows = []
+    for bw in (1, 2, 3):
+        cfg = mnist_cfg.mlp((512, 512), bw, 5)
+        res = train_logicnet(cfg, xt, yt, xv, yv, method="apriori",
+                             steps=budget, lr=5e-3)
+        rows.append((f"fig7.2/bw{bw}", 0.0,
+                     f"acc={res.accuracy:.4f} luts={cfg.total_luts()}"))
+    return rows
+
+
+def table_7_2(budget: int = 250) -> list[Row]:
+    """Pruning methods on MNIST: a-priori vs momentum vs iterative."""
+    xt, yt, xv, yv = _mnist_data()
+    cfg = mnist_cfg.mlp((512, 512), 2, 6)
+    rows = []
+    for method in ("apriori", "momentum", "iterative"):
+        res = train_logicnet(cfg, xt, yt, xv, yv, method=method,
+                             steps=budget * (2 if method == "iterative"
+                                             else 1), lr=5e-3, seed=5)
+        rows.append((f"table7.2/{method}", 0.0,
+                     f"acc={res.accuracy:.4f}"))
+    return rows
+
+
+def table_7_3(budget: int = 250) -> list[Row]:
+    """Skip connections: accuracy up, sparse-layer LUT cost unchanged."""
+    xt, yt, xv, yv = _mnist_data()
+    rows = []
+    for n_skip, skips in [(0, ()), (1, ((0, 2),)), (2, ((0, 2), (1, 3)))]:
+        cfg = mnist_cfg.mlp((256, 256, 256), 2, 6, skips=skips)
+        res = train_logicnet(cfg, xt, yt, xv, yv, method="apriori",
+                             steps=budget, lr=5e-3, seed=7)
+        sparse_luts = sum(cfg.luts()[:3])
+        rows.append((f"table7.3/skip{n_skip}", 0.0,
+                     f"acc={res.accuracy:.4f} sparse_luts={sparse_luts}"))
+    return rows
+
+
+def table_7_4(budget: int = 200) -> list[Row]:
+    """Convolution ablation (FP / FP_DW / FP_X_DW / QUANT_X_DW) on the
+    SparseConv stack: quantization costs the most accuracy (§7)."""
+    from repro.core.layers import (SparseConvCfg, sparse_conv_apply,
+                                   sparse_conv_init)
+    x, y = mnist_like_data(2400, seed=1)
+    xt, yt, xv, yv = x[:2000], y[:2000], x[2000:], y[2000:]
+
+    def make_forward(variant):
+        cc = SparseConvCfg(in_channels=1, out_channels=16, kernel_size=3,
+                           stride=2,
+                           x_k=9 if variant in ("FP", "FP_DW") else 5,
+                           x_s=16 if variant in ("FP", "FP_DW") else 5,
+                           bw_in=8 if variant != "QUANT_X_DW" else 2,
+                           bw_mid=8 if variant != "QUANT_X_DW" else 2,
+                           first_layer=True)
+        return cc
+
+    rows = []
+    for variant in ("FP_DW", "FP_X_DW", "QUANT_X_DW"):
+        cc = make_forward(variant)
+        key = jax.random.PRNGKey(11)
+        conv = sparse_conv_init(cc, key)
+        head_cfg = LN.LogicNetCfg(16 * 13 * 13, 10, hidden=(128,),
+                                  fan_in=6, bw=2, final_dense=True,
+                                  bw_fc=2)
+        head = LN.init(head_cfg, jax.random.PRNGKey(12))
+
+        from repro.optim.adamw import (AdamWCfg, adamw_update,
+                                       init_opt_state)
+        params = {"conv": conv["params"],
+                  "head": [l["params"] for l in head]}
+        opt = init_opt_state(params)
+        ocfg = AdamWCfg(lr=5e-3, clip_norm=1.0)
+        conv_masks = {"dw": conv["mask_dw"], "pw": conv["mask_pw"]}
+        head_masks = [l.get("mask") for l in head]
+        state = {"conv_bn": conv["bn_state"],
+                 "head_bn": [l.get("bn_state") for l in head]}
+
+        @jax.jit
+        def step(params, opt, state, xb, yb):
+            def loss(params):
+                cl = {"params": params["conv"], "mask_dw": conv_masks["dw"],
+                      "mask_pw": conv_masks["pw"],
+                      "bn_state": state["conv_bn"]}
+                h, cl2 = sparse_conv_apply(cc, cl, xb, train=True)
+                h = h.reshape(h.shape[0], -1)
+                mdl = [
+                    {"params": p,
+                     **({"mask": m} if m is not None else {}),
+                     "bn_state": s}
+                    for p, m, s in zip(params["head"], head_masks,
+                                       state["head_bn"])]
+                nll, mdl2 = LN.loss_fn(head_cfg, mdl, h, yb, train=True)
+                return nll, (cl2["bn_state"],
+                             [l["bn_state"] for l in mdl2])
+
+            (nll, (cbn, hbn)), g = jax.value_and_grad(loss, has_aux=True)(
+                params)
+            new_p, new_o = adamw_update(ocfg, params, g, opt)
+            return new_p, new_o, {"conv_bn": cbn, "head_bn": hbn}, nll
+
+        rng = np.random.default_rng(0)
+        for i in range(budget):
+            idx = rng.integers(0, len(xt), 128)
+            params, opt, state, nll = step(params, opt, state,
+                                           jnp.asarray(xt[idx]),
+                                           jnp.asarray(yt[idx]))
+
+        @jax.jit
+        def predict(params, state, xb):
+            cl = {"params": params["conv"], "mask_dw": conv_masks["dw"],
+                  "mask_pw": conv_masks["pw"], "bn_state": state["conv_bn"]}
+            h, _ = sparse_conv_apply(cc, cl, xb, train=False)
+            h = h.reshape(h.shape[0], -1)
+            mdl = [
+                {"params": p, **({"mask": m} if m is not None else {}),
+                 "bn_state": s}
+                for p, m, s in zip(params["head"], head_masks,
+                                   state["head_bn"])]
+            logits, _ = LN.forward(head_cfg, mdl, h, train=False)
+            return logits
+
+        logits = predict(params, state, jnp.asarray(xv))
+        acc = float((jnp.argmax(logits, -1) == jnp.asarray(yv)).mean())
+        rows.append((f"table7.4/{variant}", 0.0, f"acc={acc:.4f}"))
+    return rows
+
+
+def all_tables(quick: bool = False) -> list[Row]:
+    b = 120 if quick else 300
+    bm = 100 if quick else 250
+    parts = [
+        ("table2.1", table_2_1, {}),
+        ("table5.1", table_5_1, {}),
+        ("table5.2", table_5_2, {"budget": b}),
+        ("table6.1", table_6_1, {}),
+        ("table6.2", table_6_2, {"budget": b}),
+        ("table6.3", table_6_3, {"budget": b}),
+        ("table7.1", table_7_1, {"budget": bm}),
+        ("fig7.2", fig_7_2_bitwidth, {"budget": bm}),
+        ("table7.2", table_7_2, {"budget": bm}),
+        ("table7.3", table_7_3, {"budget": bm}),
+        ("table7.4", table_7_4, {"budget": 80 if quick else 200}),
+    ]
+    rows: list[Row] = []
+    for name, fn, kw in parts:
+        try:
+            rows += fn(**kw)
+        except Exception as e:  # isolate: one table must not sink the run
+            rows.append((f"{name}/ERROR", 0.0, repr(e)))
+    return rows

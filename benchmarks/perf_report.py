@@ -1,0 +1,57 @@
+"""§Perf before/after comparisons between baseline and variant artifacts."""
+
+from __future__ import annotations
+
+from benchmarks.roofline import analyze, load_cells
+
+
+def _cell(cells, arch, shape, mesh="16x16", variant=None):
+    key = f"{arch}__{shape}__{mesh}"
+    if variant and variant != "baseline":
+        key += f"__{variant}"
+    base = cells.get(key)
+    if base is None or base.get("status") != "ok":
+        return None
+    u2rec = None
+    for suffix in ("__u2", "__u3"):
+        alt = cells.get(key + suffix)
+        if alt and alt.get("status") == "ok":
+            u2rec = alt
+    return analyze(base, u2rec)
+
+
+def compare(arch: str, shape: str, variants: list[str],
+            out_dir: str = "experiments/dryrun") -> list[dict]:
+    """Rows: baseline first, then each variant with deltas vs baseline."""
+    cells = load_cells(out_dir)
+    base = _cell(cells, arch, shape)
+    rows = []
+    if base is None:
+        return rows
+    base["delta_dom"] = "—"
+    rows.append(base)
+    for v in variants:
+        r = _cell(cells, arch, shape, variant=v)
+        if r is None:
+            continue
+        dom = base["dominant"]
+        key = f"{dom}_s"
+        r["delta_dom"] = (f"{(r[key] - base[key]) / base[key] * 100:+.1f}%"
+                          f" on baseline-dominant ({dom})")
+        rows.append(r)
+    return rows
+
+
+def markdown(rows: list[dict]) -> str:
+    if not rows:
+        return "_(artifacts missing)_"
+    hdr = ("| variant | compute s | memory s | coll s | dominant | "
+           "useful | roofline frac | Δ dominant term |")
+    lines = [hdr, "|" + "---|" * 8]
+    for r in rows:
+        lines.append(
+            f"| {r['variant']} | {r['compute_s']:.3e} | {r['memory_s']:.3e}"
+            f" | {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.4f} "
+            f"| {r.get('delta_dom', '')} |")
+    return "\n".join(lines)

@@ -1,0 +1,233 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun), applies
+the two-point while-loop cost fit, and reports per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs / peak_FLOPs            [s, per chip]
+    memory term     = HLO_bytes / HBM_bw                [s, per chip]
+    collective term = collective_bytes / link_bw        [s, per chip]
+
+plus the dominant term, MODEL_FLOPS = {6,2}*N*D, the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs, and the roofline fraction (ideal compute time /
+bottleneck time).
+
+Fit: XLA cost_analysis counts while-loop bodies once.  With layer-scan
+bodies widened to u copies, every metric is linear in u:
+m(u) = fixed + u*c, so   true = m(1) + (L - 1) * (m(u2) - m(1)) / (u2 - 1)
+with L the layer-scan trip count.  (Attention KV-chunk loops are fully
+unrolled at lowering time, so they are inside c already.)
+
+Hardware model (TPU v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (3D-torus links are counted via the wire-factor applied
+in launch/hlo_stats.py).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+COST_KEYS = ("flops", "bytes accessed", "transcendentals")
+
+
+def load_cells(out_dir: str = "experiments/dryrun") -> dict[str, dict]:
+    cells: dict[str, dict] = {}
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        key = os.path.basename(path)[:-5]
+        cells[key] = rec
+    return cells
+
+
+def _fit(base: dict, u2rec: dict | None) -> dict:
+    """Two-point correction of cost/collective metrics."""
+    L = base.get("scan_length", 1)
+    u2 = (u2rec or {}).get("scan_unroll", None)
+    out = {"corrected": u2 is not None, "scan_length": L}
+
+    def corr(m1: float, m2: float | None) -> float:
+        if m2 is None or u2 in (None, 1):
+            return m1
+        c = max((m2 - m1) / (u2 - 1), 0.0)
+        return m1 + (L - 1) * c
+
+    cost = {}
+    for k in COST_KEYS:
+        m1 = (base.get("cost") or {}).get(k)
+        m2 = (u2rec or {}).get("cost", {}).get(k) if u2rec else None
+        if m1 is not None:
+            cost[k] = corr(m1, m2)
+    out["cost"] = cost
+    coll = {}
+    for k, v in (base.get("collectives") or {}).items():
+        if k.startswith("n_"):
+            coll[k] = v
+            continue
+        v2 = (u2rec or {}).get("collectives", {}).get(k) if u2rec else None
+        coll[k] = corr(v, v2)
+    out["collectives"] = coll
+    return out
+
+
+def analyze(base: dict, u2rec: dict | None) -> dict:
+    fit = _fit(base, u2rec)
+    flops = fit["cost"].get("flops", 0.0)
+    mem_bytes = fit["cost"].get("bytes accessed", 0.0)
+    coll_bytes = fit["collectives"].get("total", 0.0)
+    chips = base.get("chips", 256)
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = mem_bytes / HBM_BW
+    collective_s = coll_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    n_active = base.get("active_params", base.get("params", 0))
+    d_tokens = (base["global_batch"] * base["seq_len"]
+                if base["kind"] in ("train", "prefill")
+                else base["global_batch"])
+    mult = 6 if base["kind"] == "train" else 2
+    model_flops_global = mult * n_active * d_tokens
+    model_flops_chip = model_flops_global / chips
+    useful_ratio = model_flops_chip / flops if flops else 0.0
+    ideal_s = model_flops_chip / PEAK_FLOPS
+    bound_s = max(terms.values())
+    roofline_fraction = ideal_s / bound_s if bound_s else 0.0
+    # Bandwidth fraction: minimal traffic (read every argument byte once —
+    # params/opt-state/caches) over the measured memory term.  The honest
+    # score for memory-bound cells (decode especially).
+    arg_bytes = (base.get("memory") or {}).get("argument_bytes") or 0
+    bw_fraction = (arg_bytes / HBM_BW) / memory_s if memory_s else 0.0
+
+    return {
+        "arch": base["arch"], "shape": base["shape"], "mesh": base["mesh"],
+        "variant": base.get("variant", "baseline"),
+        "kind": base["kind"], "chips": chips,
+        "corrected": fit["corrected"],
+        "flops_chip": flops, "bytes_chip": mem_bytes,
+        "coll_bytes_chip": coll_bytes,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops_global": model_flops_global,
+        "useful_ratio": useful_ratio,
+        "roofline_fraction": roofline_fraction,
+        "bw_fraction": bw_fraction,
+        "peak_bytes": (base.get("memory") or {}).get("peak_bytes"),
+        "collectives": fit["collectives"],
+    }
+
+
+def full_table(out_dir: str = "experiments/dryrun",
+               variant: str | None = None) -> list[dict]:
+    cells = load_cells(out_dir)
+    rows = []
+    for key, rec in cells.items():
+        if key.endswith("__u2") or key.endswith("__u3"):
+            continue
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"],
+                         "variant": rec.get("variant", "baseline"),
+                         "status": "skipped",
+                         "skip_reason": rec.get("skip_reason")})
+            continue
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec.get("arch"), "shape": rec.get("shape"),
+                         "mesh": rec.get("mesh"), "status": "FAILED"})
+            continue
+        if variant is not None and rec.get("variant") != variant:
+            continue
+        u2rec = None
+        for suffix in ("__u2", "__u3"):
+            alt = cells.get(key + suffix)
+            if alt and alt.get("status") == "ok":
+                u2rec = alt
+        row = analyze(rec, u2rec)
+        row["status"] = "ok"
+        rows.append(row)
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | variant | compute s | memory s | "
+           "coll s | dominant | useful | roofline frac | bw frac |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r.get("arch") or "",
+                                         r.get("shape") or "",
+                                         r.get("mesh") or "")):
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"{r.get('variant','-')} | — | — | — | skipped "
+                         f"| — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r.get('arch')} | {r.get('shape')} | "
+                         f"{r.get('mesh')} | - | — | — | — | FAILED | — "
+                         f"| — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['variant']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+            f"| {r.get('bw_fraction', 0):.3f} |")
+    return "\n".join(lines)
+
+
+def dryrun_markdown(out_dir: str = "experiments/dryrun",
+                    mesh: str | None = None,
+                    variant: str = "baseline") -> str:
+    """§Dry-run table: status, per-chip peak bytes, raw HLO flops,
+    collective mix, compile time — straight from the artifacts."""
+    cells = load_cells(out_dir)
+    hdr = ("| arch | shape | mesh | status | peak GiB/chip | HLO flops "
+           "(raw) | coll GiB (raw) | top collective | compile s |")
+    lines = [hdr, "|" + "---|" * 9]
+    for key in sorted(cells):
+        if key.endswith(("__u2", "__u3")):
+            continue
+        r = cells[key]
+        if r.get("variant", "baseline") != variant:
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"skipped ({r['skip_reason'][:48]}…) | — | — | — "
+                         f"| — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r.get('arch')} | {r.get('shape')} | "
+                         f"{r.get('mesh')} | FAILED | — | — | — | — | — |")
+            continue
+        peak = (r.get("memory") or {}).get("peak_bytes") or 0
+        coll = r.get("collectives", {})
+        mix = {k: v for k, v in coll.items()
+               if not k.startswith("n_") and k != "total"}
+        top = max(mix, key=mix.get) if mix else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {peak / 2**30:.2f} | {r['cost'].get('flops', 0):.2e} "
+            f"| {coll.get('total', 0) / 2**30:.2f} | {top} "
+            f"| {r.get('compile_s', 0)} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    rows = full_table()
+    print(markdown_table(rows))
+    with open("experiments/roofline.json", "w") as f:
+        json.dump(rows, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

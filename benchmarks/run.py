@@ -1,0 +1,58 @@
+"""Benchmark harness entry point.
+
+Prints ``name,us_per_call,derived`` CSV: one block per paper table
+(benchmarks/paper_tables.py), the kernel microbenchmarks, and — when
+dry-run artifacts exist — the roofline summary (benchmarks/roofline.py).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only table6]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced training budgets")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, paper_tables
+
+    rows = []
+    rows += paper_tables.all_tables(quick=args.quick)
+    rows += kernel_bench.kernel_rows()
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        if args.only and args.only not in name:
+            continue
+        print(f"{name},{us:.1f},{derived}")
+
+    # Roofline summary from dry-run artifacts, if present.
+    try:
+        from benchmarks import roofline
+        cells = roofline.full_table()
+        ok = [r for r in cells if r.get("status") == "ok"]
+        if ok:
+            print(f"# roofline: {len(ok)} cells analyzed "
+                  f"(see experiments/roofline.json)")
+            for r in ok:
+                print(f"roofline/{r['arch']}__{r['shape']}__{r['mesh']}"
+                      f"__{r['variant']},0.0,"
+                      f"dominant={r['dominant']} "
+                      f"compute_s={r['compute_s']:.3e} "
+                      f"memory_s={r['memory_s']:.3e} "
+                      f"coll_s={r['collective_s']:.3e} "
+                      f"useful={r['useful_ratio']:.2f} "
+                      f"frac={r['roofline_fraction']:.4f}")
+    except Exception as e:  # artifacts absent: fine
+        print(f"# roofline: skipped ({e!r})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""End-to-end LM training driver (deliverable b).
+
+Runs the full production stack on any --arch from the registry: config ->
+model -> AdamW -> deterministic host-sharded data -> fault-tolerant
+TrainLoop (async checkpoints, NaN guard, restart).  On this CPU container
+use --size smoke (default) or --size 100m; on a real fleet the same driver
+runs the full configs under launch/mesh.py shardings.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen3-1.7b \
+        --size 100m --steps 60 --logicnet-ffn
+
+--logicnet-ffn swaps every FFN for the paper's sparse-quantized
+LogicNet-FFN (per-neuron fan-in masks + activation QAT) — the technique
+integrated at LM scale.
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.data import TokenStream
+from repro.launch.steps import make_train_state, make_train_step
+from repro.models.config import LogicNetFFNCfg
+from repro.optim.adamw import AdamWCfg, cosine_schedule
+from repro.runtime import TrainLoop, TrainLoopCfg
+
+
+def size_100m(cfg):
+    """~100M-param variant of the family (CPU-trainable for a demo run)."""
+    return dataclasses.replace(
+        cfg, n_layers=8, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        d_ff=1536, vocab=8192, attn_chunk=256, remat="none")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--size", default="smoke", choices=["smoke", "100m"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--logicnet-ffn", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    if args.size == "100m":
+        cfg = size_100m(cfg)
+    if args.logicnet_ffn:
+        cfg = dataclasses.replace(
+            cfg, logicnet_ffn=LogicNetFFNCfg(fan_in=32, bw=4, max_val=4.0))
+    n_params = cfg.param_count()
+    print(f"arch={cfg.arch_id} params~{n_params / 1e6:.1f}M "
+          f"logicnet_ffn={cfg.logicnet_ffn is not None}")
+
+    opt = AdamWCfg(lr=args.lr, weight_decay=0.01,
+                   schedule=cosine_schedule(warmup=20, total=args.steps))
+    raw_step = jax.jit(make_train_step(cfg, opt))
+    state = make_train_state(cfg, jax.random.PRNGKey(0))
+
+    stream = TokenStream(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch, seed=0,
+                         n_hosts=jax.process_count(),
+                         host=jax.process_index())
+
+    def batches(step):
+        b = stream.batch(step)
+        out = {"tokens": jnp.asarray(b["tokens"]),
+               "labels": jnp.asarray(b["labels"])}
+        if cfg.vision_tokens > 0:
+            out["vision_embeds"] = jnp.zeros(
+                (args.batch, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.enc_dec:
+            out["frames"] = jnp.zeros(
+                (args.batch, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+        return out
+
+    t_hist = []
+
+    def step_fn(state, batch):
+        t0 = time.perf_counter()
+        new_state, loss = raw_step(state, batch)
+        jax.block_until_ready(loss)
+        t_hist.append(time.perf_counter() - t0)
+        return new_state, loss
+
+    loop = TrainLoop(TrainLoopCfg(ckpt_dir=args.ckpt_dir, ckpt_every=20,
+                                  async_save=True), step_fn, state)
+    if args.resume:
+        loop.try_restore()
+    loop.run(batches, args.steps)
+
+    first = loop.metrics[0][1]
+    last = sum(l for _, l in loop.metrics[-5:]) / min(5, len(loop.metrics))
+    print(f"loss {first:.3f} -> {last:.3f} over {len(loop.metrics)} steps "
+          f"({1e3 * sum(t_hist[2:]) / max(len(t_hist) - 2, 1):.0f} "
+          f"ms/step after warmup)")
+    assert last < first, "training did not reduce loss"
+
+
+if __name__ == "__main__":
+    main()

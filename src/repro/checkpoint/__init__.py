@@ -1,0 +1,5 @@
+"""Checkpointing: mesh-agnostic save/restore with keep-k and async writes."""
+
+from repro.checkpoint.ckpt import (  # noqa: F401
+    save_checkpoint, restore_checkpoint, latest_step, CheckpointManager,
+)

@@ -1,0 +1,7 @@
+"""LogicNets core: the paper's contribution as composable JAX modules."""
+
+from repro.core.quantize import QuantizerCfg, QuantTensor, quantize, codes  # noqa: F401
+from repro.core.layers import (  # noqa: F401
+    SparseLinearCfg, DenseQuantLinearCfg, SparseConvCfg,
+)
+from repro.core.logicnet import LogicNetCfg  # noqa: F401

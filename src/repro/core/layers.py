@@ -1,0 +1,269 @@
+"""LogicNets layer types (paper §4.2–§4.4): SparseLinear, DenseQuantLinear,
+SparseConv — as pure-functional JAX modules.
+
+Every layer type has an *implicit input quantizer* (§4 design choice: LUT
+cost is exponential in input bits, linear in output bits, so input
+quantization is mandatory and output quantization optional).  Params and
+batch-norm running stats are plain dicts; fan-in masks are static arrays kept
+beside the params (never touched by the optimizer).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut_cost as lc
+from repro.core import sparsity
+from repro.core.quantize import QuantizerCfg, quantize
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.1
+
+
+# ---------------------------------------------------------------------------
+# Batch norm (per-feature, as the thesis places after every linear)
+# ---------------------------------------------------------------------------
+
+def bn_init(features: int) -> tuple[dict, dict]:
+    params = {"scale": jnp.ones((features,), jnp.float32),
+              "bias": jnp.zeros((features,), jnp.float32)}
+    state = {"mean": jnp.zeros((features,), jnp.float32),
+             "var": jnp.ones((features,), jnp.float32)}
+    return params, state
+
+
+def bn_apply(params: dict, state: dict, x: jax.Array, train: bool,
+             axis: tuple[int, ...] = (0,)) -> tuple[jax.Array, dict]:
+    if train:
+        mean = jnp.mean(x, axis=axis)
+        var = jnp.var(x, axis=axis)
+        new_state = {
+            "mean": (1 - BN_MOMENTUM) * state["mean"] + BN_MOMENTUM * mean,
+            "var": (1 - BN_MOMENTUM) * state["var"] + BN_MOMENTUM * var,
+        }
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    shape = [1] * x.ndim
+    shape[-1 if axis == (0,) or x.ndim == 2 else 1] = -1
+    # For NHWC conv activations we normalize over (0, 1, 2); features last.
+    y = (x - mean) * jax.lax.rsqrt(var + BN_EPS)
+    y = y * params["scale"] + params["bias"]
+    return y, new_state
+
+
+def bn_eval_fn(params: dict, state: dict):
+    """Per-feature affine the truth-table generator folds into the neuron."""
+    scale = params["scale"] * jax.lax.rsqrt(state["var"] + BN_EPS)
+    bias = params["bias"] - state["mean"] * scale
+    return scale, bias
+
+
+# ---------------------------------------------------------------------------
+# SparseLinear (§4.2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SparseLinearCfg:
+    in_features: int
+    out_features: int
+    fan_in: int                      # per-neuron synapse count (X)
+    bw_in: int                       # input quantizer bit-width (BW)
+    max_val_in: float = 2.0
+    use_bn: bool = True
+
+    @property
+    def in_quant(self) -> QuantizerCfg:
+        return QuantizerCfg(self.bw_in, self.max_val_in)
+
+    @property
+    def fan_in_bits(self) -> int:
+        return self.fan_in * self.bw_in
+
+    def luts(self, bw_out: int) -> int:
+        """Analytical LUT cost of this layer for a bw_out-bit output (§4.2)."""
+        return lc.sparse_linear_cost(self.out_features, self.fan_in,
+                                     self.bw_in, bw_out)
+
+
+def sparse_linear_init(cfg: SparseLinearCfg, key: jax.Array,
+                       mask_seed: int = 0) -> dict[str, Any]:
+    kw, _ = jax.random.split(key)
+    scale = 1.0 / jnp.sqrt(jnp.maximum(cfg.fan_in, 1.0))
+    w = jax.random.normal(kw, (cfg.in_features, cfg.out_features),
+                          jnp.float32) * scale
+    bn_p, bn_s = bn_init(cfg.out_features)
+    return {
+        "params": {"w": w, "b": jnp.zeros((cfg.out_features,), jnp.float32),
+                   "bn": bn_p},
+        "mask": sparsity.apriori_mask(mask_seed, cfg.in_features,
+                                      cfg.out_features, cfg.fan_in),
+        "bn_state": bn_s,
+    }
+
+
+def sparse_linear_apply(cfg: SparseLinearCfg, layer: dict[str, Any],
+                        x: jax.Array, train: bool = False
+                        ) -> tuple[jax.Array, dict[str, Any]]:
+    """Input-quantize -> masked linear -> BN.  Returns pre-(next)quantizer
+    activations plus the layer dict with updated BN state."""
+    qt = quantize(cfg.in_quant, x)
+    w = layer["params"]["w"] * layer["mask"]
+    y = qt.value @ w + layer["params"]["b"]
+    if cfg.use_bn:
+        y, bn_s = bn_apply(layer["params"]["bn"], layer["bn_state"], y, train)
+        layer = dict(layer, bn_state=bn_s)
+    return y, layer
+
+
+# ---------------------------------------------------------------------------
+# DenseQuantLinear (§4.3) — used for the final (dense) layer of most models
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DenseQuantLinearCfg:
+    in_features: int
+    out_features: int
+    bw_in: int
+    max_val_in: float = 2.0
+    bw_weight: int = 4               # for the eq. 4.1 cost model
+    use_bn: bool = True
+
+    @property
+    def in_quant(self) -> QuantizerCfg:
+        return QuantizerCfg(self.bw_in, self.max_val_in)
+
+    def luts(self) -> float:
+        return lc.dense_quant_linear_cost(self.out_features, self.in_features,
+                                          self.bw_in, self.bw_weight)
+
+
+def dense_quant_linear_init(cfg: DenseQuantLinearCfg,
+                            key: jax.Array) -> dict[str, Any]:
+    scale = 1.0 / jnp.sqrt(cfg.in_features)
+    w = jax.random.normal(key, (cfg.in_features, cfg.out_features),
+                          jnp.float32) * scale
+    bn_p, bn_s = bn_init(cfg.out_features)
+    return {
+        "params": {"w": w, "b": jnp.zeros((cfg.out_features,), jnp.float32),
+                   "bn": bn_p},
+        "bn_state": bn_s,
+    }
+
+
+def dense_quant_linear_apply(cfg: DenseQuantLinearCfg, layer: dict[str, Any],
+                             x: jax.Array, train: bool = False
+                             ) -> tuple[jax.Array, dict[str, Any]]:
+    qt = quantize(cfg.in_quant, x)
+    y = qt.value @ layer["params"]["w"] + layer["params"]["b"]
+    if cfg.use_bn:
+        y, bn_s = bn_apply(layer["params"]["bn"], layer["bn_state"], y, train)
+        layer = dict(layer, bn_state=bn_s)
+    return y, layer
+
+
+# ---------------------------------------------------------------------------
+# SparseConv (§4.4) — sparse quantized depthwise-separable convolution
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SparseConvCfg:
+    in_channels: int
+    out_channels: int
+    kernel_size: int = 3
+    stride: int = 1
+    x_k: int = 5                     # depthwise kernel sparsity (synapses)
+    x_s: int = 5                     # pointwise sparsity (synapses)
+    bw_in: int = 2                   # input quantizer bits
+    bw_mid: int = 2                  # intermediate quantizer bits
+    max_val_in: float = 2.0
+    max_val_mid: float = 2.0
+    first_layer: bool = False
+
+    @property
+    def in_quant(self) -> QuantizerCfg:
+        return QuantizerCfg(self.bw_in, self.max_val_in)
+
+    @property
+    def mid_quant(self) -> QuantizerCfg:
+        return QuantizerCfg(self.bw_mid, self.max_val_mid)
+
+    @property
+    def dw_channels(self) -> int:
+        # §4.4: first layer with 1 input channel replicates the input to
+        # out_channels depthwise kernels (a single sparse 2D kernel cannot
+        # extract enough information).
+        if self.first_layer and self.in_channels == 1:
+            return self.out_channels
+        return self.in_channels
+
+    def luts(self, out_pix: int, o_bits: int) -> tuple[int, int]:
+        dw = lc.sparse_conv_dw_cost(out_pix, self.bw_mid, self.dw_channels,
+                                    self.x_k, self.bw_in)
+        pw = lc.sparse_conv_pw_cost(out_pix, o_bits, self.out_channels,
+                                    self.x_s, self.bw_mid)
+        return dw, pw
+
+
+def sparse_conv_init(cfg: SparseConvCfg, key: jax.Array,
+                     mask_seed: int = 0) -> dict[str, Any]:
+    k_dw, k_pw = jax.random.split(key)
+    dw_ch = cfg.dw_channels
+    k2 = cfg.kernel_size * cfg.kernel_size
+    # Depthwise: (k, k, dw_ch) one kernel per channel; mask keeps x_k taps.
+    w_dw = jax.random.normal(k_dw, (cfg.kernel_size, cfg.kernel_size, dw_ch),
+                             jnp.float32) / jnp.sqrt(float(cfg.x_k))
+    m_dw = sparsity.apriori_mask(mask_seed, k2, dw_ch,
+                                 min(cfg.x_k, k2)).reshape(
+        cfg.kernel_size, cfg.kernel_size, dw_ch)
+    # Pointwise: (dw_ch, out_channels); mask keeps x_s input channels/neuron.
+    w_pw = jax.random.normal(k_pw, (dw_ch, cfg.out_channels),
+                             jnp.float32) / jnp.sqrt(float(cfg.x_s))
+    m_pw = sparsity.apriori_mask(mask_seed + 1, dw_ch, cfg.out_channels,
+                                 min(cfg.x_s, dw_ch))
+    bn1_p, bn1_s = bn_init(dw_ch)
+    bn2_p, bn2_s = bn_init(cfg.out_channels)
+    return {
+        "params": {"w_dw": w_dw, "w_pw": w_pw,
+                   "b_dw": jnp.zeros((dw_ch,), jnp.float32),
+                   "b_pw": jnp.zeros((cfg.out_channels,), jnp.float32),
+                   "bn1": bn1_p, "bn2": bn2_p},
+        "mask_dw": m_dw, "mask_pw": m_pw,
+        "bn_state": {"bn1": bn1_s, "bn2": bn2_s},
+    }
+
+
+def _depthwise(x: jax.Array, w: jax.Array, stride: int,
+               replicate: bool) -> jax.Array:
+    """NHWC depthwise conv; ``replicate`` broadcasts 1 input channel to all
+    kernels (first-layer rule, §4.4)."""
+    dw_ch = w.shape[-1]
+    if replicate:
+        x = jnp.broadcast_to(x, x.shape[:-1] + (dw_ch,))
+    kernel = w[:, :, None, :]  # (kh, kw, 1, out_ch): depthwise HWIO
+    return jax.lax.conv_general_dilated(
+        x, kernel, window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=dw_ch)
+
+
+def sparse_conv_apply(cfg: SparseConvCfg, layer: dict[str, Any],
+                      x: jax.Array, train: bool = False
+                      ) -> tuple[jax.Array, dict[str, Any]]:
+    """quant -> sparse depthwise -> BN -> quant -> sparse pointwise -> BN."""
+    p, bn = layer["params"], layer["bn_state"]
+    replicate = cfg.first_layer and cfg.in_channels == 1
+    qt = quantize(cfg.in_quant, x)
+    w_dw = p["w_dw"] * layer["mask_dw"]
+    h = _depthwise(qt.value, w_dw, cfg.stride, replicate) + p["b_dw"]
+    h, bn1_s = bn_apply(p["bn1"], bn["bn1"], h, train, axis=(0, 1, 2))
+    qm = quantize(cfg.mid_quant, h)
+    w_pw = p["w_pw"] * layer["mask_pw"]
+    y = jnp.einsum("bhwc,co->bhwo", qm.value, w_pw) + p["b_pw"]
+    y, bn2_s = bn_apply(p["bn2"], bn["bn2"], y, train, axis=(0, 1, 2))
+    layer = dict(layer, bn_state={"bn1": bn1_s, "bn2": bn2_s})
+    return y, layer

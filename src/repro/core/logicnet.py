@@ -1,0 +1,214 @@
+"""LogicNet network assembly (paper Part II): config -> train -> truth
+tables -> netlist -> Verilog, plus LUT-cost accounting and skip connections.
+
+A LogicNet is a stack of SparseLinear layers (with mandatory input
+quantizers) and an optional final DenseQuantLinear — the topology family of
+Tables 6.1 / 7.1.  Skip connections (§7 'Skip Connections') concatenate an
+earlier layer's activations into a later layer's input; because per-neuron
+fan-in is what prices a neuron, skips are LUT-cost-free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers as L
+from repro.core import netlist as NL
+from repro.core import table_infer
+from repro.core import truth_table as TT
+from repro.core.quantize import QuantizerCfg, codes, dequantize_code
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicNetCfg:
+    """Model family of the paper's experiments.
+
+    hidden: neuron counts per hidden layer (HL column).
+    fan_in: per-neuron synapses X (uniform across hidden layers).
+    bw:     activation bit-width BW.
+    final_dense: dense final layer (the usual MNIST/JSC choice); when False
+                 the final layer is sparse with fan_in_fc synapses (X_fc).
+    bw_fc:  output bit-width of the network (BW_fc).
+    skips:  list of (src_layer, dst_layer) activation concatenations.
+    """
+
+    in_features: int
+    n_classes: int
+    hidden: tuple[int, ...]
+    fan_in: int
+    bw: int
+    final_dense: bool = True
+    fan_in_fc: int | None = None
+    bw_fc: int = 3
+    max_val: float = 2.0
+    skips: tuple[tuple[int, int], ...] = ()
+
+    def layer_cfgs(self) -> list[Any]:
+        cfgs: list[Any] = []
+        widths = [self.in_features, *self.hidden]
+        for i, out_f in enumerate(self.hidden):
+            in_f = widths[i] + sum(self.hidden[s] if s > 0 else
+                                   self.in_features
+                                   for s, d in self.skips if d == i)
+            cfgs.append(L.SparseLinearCfg(
+                in_f, out_f, min(self.fan_in, in_f), self.bw,
+                self.max_val))
+        in_f = widths[-1] + sum(self.hidden[s] if s > 0 else self.in_features
+                                for s, d in self.skips
+                                if d == len(self.hidden))
+        if self.final_dense:
+            cfgs.append(L.DenseQuantLinearCfg(
+                in_f, self.n_classes, self.bw, self.max_val))
+        else:
+            cfgs.append(L.SparseLinearCfg(
+                in_f, self.n_classes,
+                min(self.fan_in_fc or self.fan_in, in_f), self.bw,
+                self.max_val))
+        return cfgs
+
+    @property
+    def out_quant(self) -> QuantizerCfg:
+        return QuantizerCfg(self.bw_fc, self.max_val)
+
+    def luts(self) -> list[int]:
+        """Per-layer analytical LUT cost (LUTL1..LUTLn columns).
+
+        Final *sparse* layers are costed at 2*BW_fc output bits — the
+        signed-logit accounting that reproduces Table 6.1 models D
+        (LUTL4=3400) and E (LUTL4=200) exactly.
+        """
+        out = []
+        cfgs = self.layer_cfgs()
+        for i, c in enumerate(cfgs):
+            if isinstance(c, L.SparseLinearCfg):
+                bw_out = (cfgs[i + 1].bw_in if i + 1 < len(cfgs)
+                          else 2 * self.bw_fc)
+                out.append(c.luts(bw_out))
+            else:
+                out.append(int(round(c.luts())))
+        return out
+
+    def total_luts(self) -> int:
+        return sum(self.luts())
+
+
+def init(cfg: LogicNetCfg, key: jax.Array, mask_seed: int = 0) -> list[dict]:
+    model = []
+    for i, c in enumerate(cfg.layer_cfgs()):
+        key, sub = jax.random.split(key)
+        if isinstance(c, L.SparseLinearCfg):
+            model.append(L.sparse_linear_init(c, sub, mask_seed + i))
+        else:
+            model.append(L.dense_quant_linear_init(c, sub))
+    return model
+
+
+def forward(cfg: LogicNetCfg, model: list[dict], x: jax.Array,
+            train: bool = False) -> tuple[jax.Array, list[dict]]:
+    """Float (STE fake-quant) forward.  Returns logits + updated BN state."""
+    cfgs = cfg.layer_cfgs()
+    acts = [x]
+    new_model = []
+    h = x
+    for i, (c, layer) in enumerate(zip(cfgs, model)):
+        inp = h
+        for s, d in cfg.skips:
+            if d == i:
+                inp = jnp.concatenate([inp, acts[s]], axis=-1)
+        if isinstance(c, L.SparseLinearCfg):
+            h, layer = L.sparse_linear_apply(c, layer, inp, train)
+        else:
+            h, layer = L.dense_quant_linear_apply(c, layer, inp, train)
+        acts.append(h)
+        new_model.append(layer)
+    return h, new_model
+
+
+def loss_fn(cfg: LogicNetCfg, model: list[dict], x: jax.Array,
+            y: jax.Array, train: bool = True
+            ) -> tuple[jax.Array, list[dict]]:
+    logits, new_model = forward(cfg, model, x, train)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    return nll, new_model
+
+
+def accuracy(cfg: LogicNetCfg, model: list[dict], x: jax.Array,
+             y: jax.Array) -> jax.Array:
+    logits, _ = forward(cfg, model, x, train=False)
+    return (jnp.argmax(logits, axis=-1) == y).mean()
+
+
+# ---------------------------------------------------------------------------
+# Conversion: NEQs -> HBBs (design-flow step 3)
+# ---------------------------------------------------------------------------
+
+def generate_tables(cfg: LogicNetCfg, model: list[dict]
+                    ) -> list[TT.LayerTruthTable]:
+    """Truth tables for every *sparse* layer (dense final layers are kept as
+    arithmetic, as in the thesis — Verilog gen supports SparseLinear only)."""
+    if cfg.skips:
+        raise NotImplementedError(
+            "table conversion for skip topologies needs bus rewiring; "
+            "train-time support only (as in the thesis)")
+    cfgs = cfg.layer_cfgs()
+    tables = []
+    for i, (c, layer) in enumerate(zip(cfgs, model)):
+        if not isinstance(c, L.SparseLinearCfg):
+            break
+        out_q = (cfgs[i + 1].in_quant if i + 1 < len(cfgs)
+                 else cfg.out_quant)
+        tables.append(TT.generate_sparse_linear_table(c, layer, out_q))
+    return tables
+
+
+def verify_tables(cfg: LogicNetCfg, model: list[dict],
+                  tables: list[TT.LayerTruthTable], x: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Functional verification: float path vs table path on the sparse stack.
+
+    Returns (codes_float_path, codes_table_path); the contract is exact
+    equality.
+    """
+    cfgs = cfg.layer_cfgs()
+    in_codes = codes(cfgs[0].in_quant, x)
+    table_out = table_infer.network_table_forward(tables, in_codes)
+
+    h = x
+    layer = None
+    for i in range(len(tables)):
+        c = cfgs[i]
+        h, _ = L.sparse_linear_apply(c, model[i], h, train=False)
+    out_q = (cfgs[len(tables)].in_quant if len(tables) < len(cfgs)
+             else cfg.out_quant)
+    float_out = codes(out_q, h)
+    return float_out, table_out
+
+
+def sparse_head_forward(cfg: LogicNetCfg, model: list[dict],
+                        tables: list[TT.LayerTruthTable],
+                        x: jax.Array) -> jax.Array:
+    """Deployment-style forward: sparse stack via tables, then the dense
+    final layer (if any) in arithmetic."""
+    cfgs = cfg.layer_cfgs()
+    c0 = cfgs[0]
+    in_codes = codes(c0.in_quant, x)
+    out_codes = table_infer.network_table_forward(tables, in_codes)
+    if len(tables) == len(cfgs):
+        return out_codes
+    cfin = cfgs[-1]
+    h = dequantize_code(cfin.in_quant, out_codes)
+    logits, _ = L.dense_quant_linear_apply(cfin, model[-1], h, train=False)
+    return logits
+
+
+def to_verilog(cfg: LogicNetCfg, model: list[dict],
+               pipeline: bool = False) -> dict[str, str]:
+    from repro.core import verilog
+    tables = generate_tables(cfg, model)
+    nl = NL.build_netlist(tables, cfg.in_features)
+    return verilog.generate_verilog(nl, pipeline)

@@ -1,0 +1,62 @@
+"""Netlist of Hardware Building Blocks (paper §4 design flow step 3).
+
+The trained network of Neuron EQuivalents (NEQs) becomes a list of LUT
+layers; each neuron is one HBB: (input bit positions on the layer bus,
+truth-table entries).  This IR feeds both the Verilog generator and the
+TPU lut_lookup serving path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.truth_table import LayerTruthTable
+
+
+@dataclasses.dataclass
+class NeuronHBB:
+    """One hardware building block (a configured multi-bit LUT)."""
+
+    layer: int
+    neuron: int
+    input_bits: list[int]     # positions on the incoming layer bus, LSB first
+    out_bits: int
+    table: np.ndarray         # (2^len(input_bits),) output codes
+
+
+@dataclasses.dataclass
+class Netlist:
+    in_bits: int                     # width of the input bus M0
+    out_bits: int                    # width of the output bus
+    layers: list[list[NeuronHBB]]
+
+    @property
+    def n_hbbs(self) -> int:
+        return sum(len(l) for l in self.layers)
+
+
+def build_netlist(tables: list[LayerTruthTable], in_features: int) -> Netlist:
+    """Wire LayerTruthTables into a bus-addressed netlist.
+
+    Layer l's input bus packs feature f's code at bits
+    [bw_in*f, bw_in*(f+1)) — the convention shared with table_infer.
+    """
+    layers = []
+    bus_features = in_features
+    for li, tt in enumerate(tables):
+        if li > 0 and bus_features != tables[li - 1].out_features:
+            raise ValueError("layer width mismatch")
+        neurons = []
+        for j in range(tt.out_features):
+            bits = []
+            for k in range(tt.fan_in):          # element k -> LSB-first
+                f = int(tt.indices[j, k])
+                bits.extend(tt.bw_in * f + b for b in range(tt.bw_in))
+            neurons.append(NeuronHBB(li, j, bits, tt.bw_out, tt.table[j]))
+        layers.append(neurons)
+        bus_features = tt.out_features
+    in_bits = tables[0].bw_in * in_features
+    out_bits = tables[-1].bw_out * tables[-1].out_features
+    return Netlist(in_bits, out_bits, layers)

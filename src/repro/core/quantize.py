@@ -1,0 +1,103 @@
+"""Activation quantizers (paper §3.1.2, §4.1).
+
+The paper uses Brevitas' ``QuantHardTanh`` (bit-width 1) and ``QuantReLU``
+(bit-width >= 2).  Both are reproduced here as pure-JAX fake-quant functions
+with straight-through-estimator (STE) gradients, returning a ``QuantTensor``
+(value-in-dequantized-representation, scale, bit_width) exactly like the
+Brevitas NamedTuple in Listing 4.1.
+
+Integer *codes* are the bridge to truth tables: ``codes()`` maps a quantized
+activation to its integer level, ``dequantize_code()`` inverts it.  The pair
+is exact (code -> value -> code round-trips bit-perfectly), which is what
+makes truth-table functional verification exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantTensor(NamedTuple):
+    """Mirror of Brevitas' QuantTensor: dequantized value + scale + bits."""
+
+    value: jax.Array
+    scale: jax.Array
+    bit_width: int
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizerCfg:
+    """Configuration of one activation quantizer.
+
+    bit_width == 1  -> QuantHardTanh: output in {-max_val, +max_val}.
+    bit_width >= 2  -> QuantReLU: uniform levels {0, ..., 2^b - 1} * step,
+                       step = max_val / (2^b - 1).
+    """
+
+    bit_width: int
+    max_val: float = 1.0
+
+    @property
+    def n_levels(self) -> int:
+        return 2 ** self.bit_width
+
+    @property
+    def step(self) -> float:
+        if self.bit_width == 1:
+            # two levels: -max_val, +max_val
+            return 2.0 * self.max_val
+        return self.max_val / (self.n_levels - 1)
+
+
+def _ste(x: jax.Array, q: jax.Array) -> jax.Array:
+    """Straight-through estimator: forward is *exactly* q (bit-exact on the
+    quantizer grid — required for truth-table equality), gradient is the
+    identity on x (the clipped pre-activation).  ``x - stop_grad(x)`` is an
+    exact zero with gradient one; ``q``'s own gradient is zero a.e. (round /
+    where)."""
+    return q + (x - jax.lax.stop_gradient(x))
+
+
+def quantize(cfg: QuantizerCfg, x: jax.Array) -> QuantTensor:
+    """Fake-quantize ``x``; forward value is exactly on the quantizer grid."""
+    if cfg.bit_width == 1:
+        # QuantHardTanh: sign() to +-max_val.  Clip for the STE pass-through
+        # region, as brevitas does for hardtanh.
+        clipped = jnp.clip(x, -cfg.max_val, cfg.max_val)
+        q = jnp.where(x >= 0.0, cfg.max_val, -cfg.max_val).astype(x.dtype)
+        return QuantTensor(_ste(clipped, q), jnp.asarray(cfg.max_val, x.dtype), 1)
+    # QuantReLU
+    step = jnp.asarray(cfg.step, x.dtype)
+    clipped = jnp.clip(x, 0.0, cfg.max_val)
+    q = jnp.round(clipped / step) * step
+    return QuantTensor(_ste(clipped, q), step, cfg.bit_width)
+
+
+def codes(cfg: QuantizerCfg, x: jax.Array) -> jax.Array:
+    """Integer level of each element of ``x`` after quantization.
+
+    For bit_width 1 the codes are {0, 1} (0 -> -max_val, 1 -> +max_val);
+    otherwise {0, ..., 2^b - 1}.
+    """
+    if cfg.bit_width == 1:
+        return (x >= 0.0).astype(jnp.int32)
+    step = cfg.step
+    c = jnp.round(jnp.clip(x, 0.0, cfg.max_val) / step)
+    return c.astype(jnp.int32)
+
+
+def dequantize_code(cfg: QuantizerCfg, c: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Exact inverse of :func:`codes` onto the quantizer grid."""
+    c = c.astype(dtype)
+    if cfg.bit_width == 1:
+        return (2.0 * c - 1.0) * cfg.max_val
+    return c * cfg.step
+
+
+def all_codes(cfg: QuantizerCfg) -> jax.Array:
+    """All integer levels of this quantizer, shape (2^bit_width,)."""
+    return jnp.arange(cfg.n_levels, dtype=jnp.int32)

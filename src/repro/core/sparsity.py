@@ -1,0 +1,171 @@
+"""Per-neuron fan-in sparsity (paper §1.2.2, §3.1.1, Algorithm 1).
+
+LogicNets needs *per-neuron* fan-in bounds, not layer-granular sparsity: every
+output neuron must see exactly ``fan_in`` inputs so its truth table stays
+enumerable.  Three families from the paper:
+
+* A-priori fixed sparsity — random bipartite expander (Deep Expander
+  Networks): each neuron picks ``fan_in`` distinct inputs uniformly at
+  random; the mask never changes during training.
+* Iterative pruning — per-neuron magnitude pruning on a decay schedule:
+  the per-neuron connection count anneals from dense to ``fan_in``.
+* Sparse momentum (modified, Algorithm 1) — per-neuron prune by |w|,
+  per-neuron regrow by |momentum| of inactive weights.  The paper's
+  modification drops cross-layer momentum redistribution (fixed fan-in
+  makes it useless) — we keep the tracked quantities for parity.
+
+Also: the Erdős–Rényi layer-sparsity allocation discussed in §3.3.
+Masks are (in_features, out_features) float {0,1} arrays; weights are stored
+dense and multiplied by the mask (weights themselves may be full precision —
+they are absorbed into truth tables at conversion time).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# A-priori fixed sparsity (random bipartite expander)
+# ---------------------------------------------------------------------------
+
+def apriori_mask(seed: int, in_features: int, out_features: int,
+                 fan_in: int) -> jax.Array:
+    """Random-expander mask: each output neuron gets ``fan_in`` distinct inputs.
+
+    Returns float32 (in_features, out_features) with exactly ``fan_in`` ones
+    per column.
+    """
+    if fan_in > in_features:
+        raise ValueError(f"fan_in {fan_in} > in_features {in_features}")
+    rng = np.random.default_rng(seed)
+    mask = np.zeros((in_features, out_features), dtype=np.float32)
+    for j in range(out_features):
+        idx = rng.choice(in_features, size=fan_in, replace=False)
+        mask[idx, j] = 1.0
+    return jnp.asarray(mask)
+
+
+def mask_to_indices(mask: jax.Array) -> np.ndarray:
+    """(out_features, fan_in) int32 input indices per neuron (sorted).
+
+    Requires a uniform per-neuron fan-in; raises otherwise — that is the
+    LogicNets invariant.
+    """
+    m = np.asarray(mask)
+    counts = m.sum(axis=0).astype(np.int64)
+    if counts.size == 0:
+        raise ValueError("empty mask")
+    if not (counts == counts[0]).all():
+        raise ValueError(f"non-uniform per-neuron fan-in: {np.unique(counts)}")
+    fan_in = int(counts[0])
+    out_features = m.shape[1]
+    idx = np.zeros((out_features, fan_in), dtype=np.int32)
+    for j in range(out_features):
+        idx[j] = np.nonzero(m[:, j])[0]
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# Per-neuron top-k re-masking (shared by iterative pruning / sparse momentum)
+# ---------------------------------------------------------------------------
+
+def _per_neuron_topk_mask(score: jax.Array, k: int) -> jax.Array:
+    """Keep, per column (neuron), the ``k`` highest-scoring rows.
+
+    Exact count even with ties (rank by double argsort, stable).
+    score: (in_features, out_features) -> float {0,1} mask of same shape.
+    """
+    # Descending rank per column.
+    order = jnp.argsort(-score, axis=0, stable=True)
+    ranks = jnp.argsort(order, axis=0, stable=True)
+    return (ranks < k).astype(score.dtype)
+
+
+def iterative_prune_mask(weights: jax.Array, mask: jax.Array,
+                         target_fan_in: int, frac: float) -> jax.Array:
+    """One iterative-pruning step (paper Fig. 3.2 pipeline).
+
+    ``frac`` in [0, 1] is training progress; the per-neuron keep count decays
+    from in_features (dense) to target_fan_in following a cubic schedule
+    (Zhu & Gupta style), pruning smallest-magnitude *active* weights per
+    neuron.  Returns the new mask.
+    """
+    in_features = weights.shape[0]
+    frac = float(np.clip(frac, 0.0, 1.0))
+    keep = int(round(target_fan_in + (in_features - target_fan_in)
+                     * (1.0 - frac) ** 3))
+    keep = max(target_fan_in, min(in_features, keep))
+    score = jnp.abs(weights) * mask  # only active weights compete
+    return _per_neuron_topk_mask(score, keep)
+
+
+def sparse_momentum_step(weights: jax.Array, momentum: jax.Array,
+                         mask: jax.Array, fan_in: int,
+                         prune_rate: float) -> jax.Array:
+    """Algorithm 1 (modified per-neuron sparse learning), one pruning step.
+
+    Per neuron: prune ``P1 = ceil(prune_rate * fan_in)`` smallest-|w| active
+    weights, regrow the same number of inactive weights with the largest
+    |momentum|.  The fixed fan-in F is preserved exactly (the paper's
+    modification: no cross-layer redistribution).
+    """
+    n_prune = int(np.ceil(prune_rate * fan_in))
+    n_prune = min(n_prune, fan_in)
+    keep = fan_in - n_prune
+    big = jnp.asarray(np.finfo(np.float32).max, weights.dtype)
+    # Keep the (fan_in - n_prune) largest-|w| active weights ...
+    active_score = jnp.where(mask > 0, jnp.abs(weights), -big)
+    kept = _per_neuron_topk_mask(active_score, keep)
+    # ... regrow n_prune inactive weights by |momentum|.
+    inactive_score = jnp.where(kept > 0, -big, jnp.abs(momentum))
+    regrown = _per_neuron_topk_mask(inactive_score, n_prune)
+    return jnp.clip(kept + regrown, 0.0, 1.0)
+
+
+def momentum_ema(momentum: jax.Array, grad: jax.Array,
+                 alpha: float = 0.9) -> jax.Array:
+    """Exponentially smoothed gradient M^{t+1} = a M^t + (1-a) dE/dW (§3.1.1)."""
+    return alpha * momentum + (1.0 - alpha) * grad
+
+
+def mean_momentum_contributions(momenta: list[jax.Array],
+                                masks: list[jax.Array]) -> jax.Array:
+    """Normalized mean momentum per layer (tracked-for-parity, §3.1.1).
+
+    The paper keeps computing this even though the fixed-fan-in modification
+    gives it "no redistribution utility"; we do the same so the algorithm's
+    variables stay observable.
+    """
+    means = jnp.stack([
+        jnp.abs(m * (k > 0)).sum() / jnp.maximum((k > 0).sum(), 1)
+        for m, k in zip(momenta, masks)
+    ])
+    return means / jnp.maximum(means.sum(), 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Erdős–Rényi layer-sparsity allocation (§3.3.1)
+# ---------------------------------------------------------------------------
+
+def erdos_renyi_sparsity(layer_dims: list[tuple[int, int]],
+                         scale: float = 1.0) -> list[float]:
+    """Per-layer sparsity ~ 1 - scale * (n_in + n_out) / (n_in * n_out).
+
+    Larger layers get higher sparsity (fewer connections per weight), smaller
+    layers lower — §3.3.1's balancing argument.
+    """
+    out = []
+    for n_in, n_out in layer_dims:
+        s = 1.0 - scale * (n_in + n_out) / (n_in * n_out)
+        out.append(float(np.clip(s, 0.0, 1.0)))
+    return out
+
+
+def fan_in_from_sparsity(in_features: int, sparsity: float,
+                         minimum: int = 1) -> int:
+    """Convert a layer sparsity to the per-neuron fan-in it implies."""
+    return max(minimum, int(round(in_features * (1.0 - sparsity))))

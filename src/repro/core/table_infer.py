@@ -1,0 +1,54 @@
+"""Truth-table functional verification (paper §4.2 'use_table' forward).
+
+Runs the network *through the generated tables*: pack each neuron's selected
+input codes into a table index, gather the output code.  Must match the
+quantized float forward bit-exactly — that is the verification contract, and
+it is also precisely what the Pallas ``lut_lookup`` kernel executes on TPU
+(this module doubles as its reference semantics at the network level).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.truth_table import LayerTruthTable
+
+
+def pack_codes(codes: jax.Array, indices: jax.Array, bw_in: int) -> jax.Array:
+    """(batch, in_features) codes + (O, fi) indices -> (batch, O) table ids.
+
+    Element k of a neuron's fan-in list lands at bits [bw_in*k, bw_in*(k+1)).
+    """
+    gathered = codes[:, indices]                       # (batch, O, fi)
+    shifts = bw_in * jnp.arange(indices.shape[1], dtype=jnp.int32)
+    return jnp.sum(gathered << shifts[None, None, :], axis=-1)
+
+
+def layer_table_forward(tt: LayerTruthTable, codes: jax.Array) -> jax.Array:
+    """One sparse layer via its truth table: (batch, I) -> (batch, O) codes."""
+    table = jnp.asarray(tt.table)                      # (O, E)
+    idx = jnp.asarray(tt.indices)
+    entry = pack_codes(codes, idx, tt.bw_in)           # (batch, O)
+    # Per-neuron gather: out[b, o] = table[o, entry[b, o]].
+    return jnp.take_along_axis(table[None, :, :],
+                               entry[:, :, None], axis=2)[..., 0]
+
+
+def network_table_forward(tables: list[LayerTruthTable],
+                          in_codes: jax.Array) -> jax.Array:
+    """Full sparse-stack forward on integer codes."""
+    c = in_codes
+    for tt in tables:
+        c = layer_table_forward(tt, c)
+    return c
+
+
+def table_memory_bytes(tables: list[LayerTruthTable]) -> int:
+    """Table 5.1-style storage accounting (packed to minimal int width)."""
+    total = 0
+    for tt in tables:
+        width = 1 if tt.bw_out <= 8 else (2 if tt.bw_out <= 16 else 4)
+        total += tt.out_features * tt.n_entries * width
+    return total

@@ -1,0 +1,164 @@
+"""Truth-table generation (paper §5.1) and the logic-minimization proxy.
+
+A trained SparseLinear neuron j with fan-in ``fi`` synapses and a ``bi``-bit
+input quantizer is a boolean function of ``fi*bi`` bits.  We enumerate all
+``2^(fi*bi)`` input codes, run them through the *exact* neuron function
+(dequantize -> dot(w) + b -> folded BN -> next layer's input quantizer) and
+record the output codes.
+
+Bit-packing convention (shared with table_infer, the Pallas lut_lookup
+kernel, and the Verilog generator): input element k (k-th entry of the
+neuron's sorted fan-in index list) occupies bits [bi*k, bi*(k+1)) of the
+table index, LSB first.  A layer's flattened bus packs feature f's code at
+bits [bi*f, bi*(f+1)).
+
+Per-neuron generation is chunked over table entries so 20+-bit fan-ins
+stream through without materializing (entries x neurons) floats at once —
+the "on the go calculation ... for each neuron" the paper calls for.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers as L
+from repro.core.quantize import QuantizerCfg, codes, dequantize_code
+from repro.core.sparsity import mask_to_indices
+
+MAX_FAN_IN_BITS = 24  # enumeration gate; exponential blow-up is fundamental
+
+
+@dataclasses.dataclass
+class LayerTruthTable:
+    """Truth tables for one sparse layer.
+
+    table:   (out_features, 2^(fan_in*bw_in)) int32 output codes
+    indices: (out_features, fan_in) int32 input feature indices (sorted)
+    bw_in:   input quantizer bits (per element)
+    bw_out:  output quantizer bits
+    """
+
+    table: np.ndarray
+    indices: np.ndarray
+    bw_in: int
+    bw_out: int
+
+    @property
+    def out_features(self) -> int:
+        return self.table.shape[0]
+
+    @property
+    def fan_in(self) -> int:
+        return self.indices.shape[1]
+
+    @property
+    def n_entries(self) -> int:
+        return self.table.shape[1]
+
+
+def _entry_digits(entry_ids: jax.Array, fan_in: int, bw_in: int) -> jax.Array:
+    """(E,) table indices -> (E, fan_in) per-element codes (LSB-first)."""
+    shifts = bw_in * jnp.arange(fan_in, dtype=entry_ids.dtype)
+    mask = (1 << bw_in) - 1
+    return (entry_ids[:, None] >> shifts[None, :]) & mask
+
+
+def generate_sparse_linear_table(cfg: L.SparseLinearCfg, layer: dict,
+                                 out_quant: QuantizerCfg,
+                                 chunk: int = 1 << 14) -> LayerTruthTable:
+    """Enumerate truth tables for every neuron of a SparseLinear layer.
+
+    ``out_quant`` is the *next* module's input quantizer (or the network's
+    final output quantizer) — §4.2: "it expects us to give the next module
+    in the forward pass".
+    """
+    fi_bits = cfg.fan_in_bits
+    if fi_bits > MAX_FAN_IN_BITS:
+        raise ValueError(
+            f"fan-in {fi_bits} bits exceeds enumeration gate "
+            f"({MAX_FAN_IN_BITS}); 2^{fi_bits} entries is infeasible — the "
+            "same wall the paper hits on FPGAs")
+    idx = mask_to_indices(layer["mask"])                    # (O, fi)
+    w = np.asarray(layer["params"]["w"] * layer["mask"])    # (I, O)
+    b = np.asarray(layer["params"]["b"])                    # (O,)
+    wj = np.take_along_axis(w, idx.T, axis=0).T             # (O, fi)
+    if cfg.use_bn:
+        scale, bias = L.bn_eval_fn(layer["params"]["bn"], layer["bn_state"])
+        scale, bias = np.asarray(scale), np.asarray(bias)
+    else:
+        scale, bias = np.ones_like(b), np.zeros_like(b)
+
+    n_entries = 2 ** fi_bits
+    in_q = cfg.in_quant
+    wj_j, b_j = jnp.asarray(wj), jnp.asarray(b)
+    scale_j, bias_j = jnp.asarray(scale), jnp.asarray(bias)
+
+    @jax.jit
+    def eval_chunk(entry_ids: jax.Array) -> jax.Array:
+        digits = _entry_digits(entry_ids, cfg.fan_in, in_q.bit_width)
+        vals = dequantize_code(in_q, digits)                # (E, fi)
+        pre = vals @ wj_j.T + b_j                           # (E, O)
+        y = pre * scale_j + bias_j
+        return codes(out_quant, y).T                        # (O, E)
+
+    out = np.empty((cfg.out_features, n_entries), dtype=np.int32)
+    for start in range(0, n_entries, chunk):
+        stop = min(start + chunk, n_entries)
+        ids = jnp.arange(start, stop, dtype=jnp.int32)
+        out[:, start:stop] = np.asarray(eval_chunk(ids))
+    return LayerTruthTable(out, idx, in_q.bit_width, out_quant.bit_width)
+
+
+def table_as_listing(tt: LayerTruthTable, neuron: int) -> list[list[int]]:
+    """Listing 5.1 structure: [[input codes...], [output codes...]]."""
+    return [list(range(tt.n_entries)), tt.table[neuron].tolist()]
+
+
+# ---------------------------------------------------------------------------
+# Logic-minimization proxy (§5.3 / Table 5.2 stand-in; see DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def minimized_lut_estimate(tt: LayerTruthTable) -> int:
+    """Cheap stand-in for Vivado synthesis results (Table 5.2).
+
+    Three reductions Vivado reliably finds that we can count exactly:
+      * constant output bits cost 0 LUTs;
+      * duplicate neurons (identical table + identical fan-in wires) are
+        synthesized once;
+      * per output bit, if the function ignores some inputs (the bit is
+        independent of an input element), the effective fan-in shrinks.
+    Returns an estimated 6-LUT count for the layer (<= analytical cost).
+    """
+    from repro.core.lut_cost import lut_cost_per_bit
+
+    seen: dict[bytes, int] = {}
+    total = 0
+    for j in range(tt.out_features):
+        key = tt.table[j].tobytes() + tt.indices[j].tobytes()
+        if key in seen:
+            continue
+        seen[key] = j
+        for bit in range(tt.bw_out):
+            col = (tt.table[j] >> bit) & 1
+            if col.min() == col.max():
+                continue  # constant bit: free
+            eff_bits = _effective_fan_in_bits(col, tt.fan_in, tt.bw_in)
+            total += lut_cost_per_bit(max(eff_bits, 1))
+    return total
+
+
+def _effective_fan_in_bits(col: np.ndarray, fan_in: int, bw_in: int) -> int:
+    """Count input *bits* this single-output-bit function depends on."""
+    n_bits = fan_in * bw_in
+    entries = np.arange(col.shape[0])
+    used = 0
+    for bit in range(n_bits):
+        lo = entries[(entries >> bit) & 1 == 0]
+        if not np.array_equal(col[lo], col[lo | (1 << bit)]):
+            used += 1
+    return used

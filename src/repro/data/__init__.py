@@ -1,0 +1,5 @@
+"""Deterministic synthetic data pipelines (offline container; DESIGN.md §6)."""
+
+from repro.data.pipeline import (  # noqa: F401
+    TokenStream, jet_substructure_data, mnist_like_data,
+)

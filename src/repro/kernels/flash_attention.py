@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: blocked flash attention (forward) with GQA + windows.
+
+The LM-zoo prefill hot path.  Online-softmax over KV blocks: for each
+(batch*head, q-block) grid cell the kernel streams KV blocks through VMEM,
+maintaining running max/denominator so the (S x S) logits never materialize
+in HBM — the standard memory-roofline move for 32k prefill.
+
+Supports:
+  * causal masking (decoder LMs),
+  * GQA: q heads grouped over fewer KV heads (the BlockSpec index maps a
+    q-head to its KV head, so KV tiles are fetched once per group),
+  * sliding windows (gemma3 5:1 local:global pattern).
+
+Grid: (batch, q_heads, S/block_q, S/block_k); the KV axis is innermost and
+sequential, carrying (acc, m, l) in VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int | None,
+            block_q: int, block_k: int, n_k: int, seq_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # Skip fully-masked KV blocks (causal upper triangle / outside window).
+    pred = jnp.bool_(True)
+    if causal:
+        pred &= k_start <= q_start + block_q - 1
+    if window is not None:
+        pred &= k_start + block_k - 1 > q_start - window
+
+    @pl.when(pred)
+    def _compute():
+        q = q_ref[0, 0, ...].astype(jnp.float32)     # (bq, d)
+        k = k_ref[0, 0, ...].astype(jnp.float32)     # (bk, d)
+        v = v_ref[0, 0, ...].astype(jnp.float32)     # (bk, d)
+        # Zero the padded KV tail of the last block: OOB tile regions are
+        # undefined and 0 * undefined would still poison the accumulator.
+        kv_valid = (k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_k, 1), 0)) < seq_len
+        k = jnp.where(kv_valid, k, 0)
+        v = jnp.where(kv_valid, v, 0)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+
+        qpos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_len          # zero-padded KV tail of the last block
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                          # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                       # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)               # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        out_ref[0, 0, ...] = (acc_ref[...] / denom).astype(out_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int | None = None,
+                           scale: float | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q (B, Hq, S, D); k, v (B, Hkv, S, D) -> (B, Hq, S, D)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, "GQA requires Hq % Hkv == 0"
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    n_k = pl.cdiv(s, block_k)
+    grid = (b, hq, pl.cdiv(s, block_q), n_k)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          block_q=block_q, block_k=block_k, n_k=n_k,
+                          seq_len=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bb, h, qi, ki: (bb, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, h, qi, ki, g=group: (bb, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, h, qi, ki, g=group: (bb, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bb, h, qi, ki: (bb, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: LogicNets LUT-layer inference (the HBB gather).
+
+TPU adaptation of the paper's core mechanism (DESIGN.md §2): on an FPGA a
+neuron *is* a configured K-LUT; on a TPU the layer's truth tables live as a
+tensor in VMEM and inference is "pack input codes -> gather output codes".
+
+Scattered gathers are slow on TPU (no hardware gather across lanes), so both
+gathers are expressed as **one-hot contractions on the MXU**:
+
+  * fan-in gather:  sel[o,k,i] = (indices[o,k] == i); g = sel · codes
+  * table gather:   out[b,o]  += Σ_e (entry[b,o] == e+off) * table[o,e+off]
+    streamed over E in chunks so the compare tensor stays inside VMEM.
+
+Grid: (batch tiles × neuron tiles); per step the kernel sees a
+(block_b, I) code slab, a (block_o, FI) index slab and a (block_o, E) table
+slab — all VMEM-resident under the default tile sizes (see ops.lut_lookup
+for the sizing arithmetic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(codes_ref, idx_ref, table_ref, out_ref, *, bw_in: int,
+            e_chunk: int):
+    codes = codes_ref[...]                      # (bb, I) int32
+    idx = idx_ref[...]                          # (bo, FI) int32
+    table = table_ref[...]                      # (bo, E) int32
+    bb, n_in = codes.shape
+    bo, fan_in = idx.shape
+    n_entries = table.shape[1]
+
+    # --- fan-in gather as one-hot contraction (MXU) -----------------------
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (n_in, 1), 0)[:, 0]
+    sel = (idx[:, :, None] == iota_i[None, None, :]).astype(jnp.float32)
+    # (bo*FI, I) @ (I, bb) -> (bo*FI, bb)
+    g = jax.lax.dot(sel.reshape(bo * fan_in, n_in),
+                    codes.astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32)
+    g = g.reshape(bo, fan_in, bb).astype(jnp.int32)
+
+    # --- pack fan-in codes into table indices -----------------------------
+    shifts = bw_in * jax.lax.broadcasted_iota(jnp.int32, (fan_in, 1), 0)[:, 0]
+    entry = jnp.sum(g << shifts[None, :, None], axis=1)   # (bo, bb)
+
+    # --- table gather, streamed over entry chunks -------------------------
+    n_chunks = pl.cdiv(n_entries, e_chunk)
+
+    def body(c, acc):
+        off = c * e_chunk
+        tchunk = jax.lax.dynamic_slice(table, (0, off), (bo, e_chunk))
+        eids = off + jax.lax.broadcasted_iota(jnp.int32, (1, e_chunk), 1)
+        hit = (entry[:, :, None] == eids[None, :, :])     # (bo, bb, ec)
+        return acc + jnp.sum(jnp.where(hit, tchunk[:, None, :], 0), axis=2)
+
+    acc = jnp.zeros((bo, bb), jnp.int32)
+    acc = jax.lax.fori_loop(0, n_chunks, body, acc)
+    out_ref[...] = acc.T                                   # (bb, bo)
+
+
+def lut_lookup_pallas(codes: jax.Array, indices: jax.Array, table: jax.Array,
+                      bw_in: int, *, block_b: int = 128, block_o: int = 128,
+                      e_chunk: int = 512,
+                      interpret: bool = False) -> jax.Array:
+    """(batch, I) codes -> (batch, O) codes through per-neuron truth tables."""
+    batch, n_in = codes.shape
+    n_out, fan_in = indices.shape
+    n_entries = table.shape[1]
+    block_b = min(block_b, batch)
+    block_o = min(block_o, n_out)
+    e_chunk = min(e_chunk, n_entries)
+    # Both are powers of two (entries = 2^(fan_in*bw_in)), so chunks tile
+    # the table exactly — required for the streamed compare to be sound.
+    assert n_entries % e_chunk == 0, (n_entries, e_chunk)
+    grid = (pl.cdiv(batch, block_b), pl.cdiv(n_out, block_o))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bw_in=bw_in, e_chunk=e_chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n_in), lambda b, o: (b, 0)),
+            pl.BlockSpec((block_o, fan_in), lambda b, o: (o, 0)),
+            pl.BlockSpec((block_o, n_entries), lambda b, o: (o, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda b, o: (b, o)),
+        out_shape=jax.ShapeDtypeStruct((batch, n_out), jnp.int32),
+        interpret=interpret,
+    )(codes, indices, table)

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: fan-in-masked matmul (LogicNets training hot path).
+
+y = x @ (w * mask) + b with a per-neuron binary mask.  The mask multiply
+happens on the (bk, bn) weight tile already resident in VMEM, so the MXU
+sees an ordinary dense matmul — per-neuron sparsity costs no matmul
+throughput (the paper's LUT-cost model prices fan-in, not FLOPs; on TPU the
+fan-in mask is free compute-wise and we keep MXU alignment instead).
+
+Grid (m, n, k) with a VMEM fp32 accumulator scratch; K is the innermost
+(sequential) axis.  Block sizes default to MXU-aligned 128/128/512.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, mask_ref, b_ref, out_ref, acc_ref, *,
+            n_k: int, k_dim: int, block_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Zero the K padding of the last block (OOB tile regions are undefined).
+    kpos = k * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_k, 1), 0)
+    valid = kpos < k_dim
+    x = jnp.where(valid.T, x_ref[...], 0)
+    wm = jnp.where(valid, w_ref[...] * mask_ref[...], 0)
+    acc_ref[...] += jax.lax.dot(x, wm, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        out_ref[...] = (acc_ref[...] + b_ref[...]).astype(out_ref.dtype)
+
+
+def masked_matmul_pallas(x: jax.Array, w: jax.Array, mask: jax.Array,
+                         b: jax.Array | None = None, *,
+                         block_m: int = 128, block_n: int = 128,
+                         block_k: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """x (M, K) @ (w * mask) (K, N) + b (N,) -> (M, N)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and mask.shape == w.shape
+    if b is None:
+        b = jnp.zeros((n,), x.dtype)
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    grid = (pl.cdiv(m, block_m), pl.cdiv(n, block_n), pl.cdiv(k, block_k))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=grid[2], k_dim=k, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_n,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w, mask, b)

@@ -1,0 +1,55 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On a TPU backend the kernels compile natively; elsewhere (this CPU
+container) they run through the Pallas interpreter, which executes the
+kernel body in Python for correctness validation — tests sweep shapes and
+dtypes against the ref.py oracles either way.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lut_lookup import lut_lookup_pallas
+from repro.kernels.masked_matmul import masked_matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bw_in", "use_pallas"))
+def lut_lookup(codes: jax.Array, indices: jax.Array, table: jax.Array,
+               bw_in: int, use_pallas: bool = True) -> jax.Array:
+    """LogicNets LUT-layer inference: (B, I) codes -> (B, O) codes."""
+    if not use_pallas:
+        return ref.lut_lookup_ref(codes, indices, table, bw_in)
+    return lut_lookup_pallas(codes, indices, table, bw_in,
+                             interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def masked_matmul(x: jax.Array, w: jax.Array, mask: jax.Array,
+                  b: jax.Array | None = None,
+                  use_pallas: bool = True) -> jax.Array:
+    """y = x @ (w * mask) + b."""
+    if not use_pallas:
+        return ref.masked_matmul_ref(x, w, mask, b)
+    return masked_matmul_pallas(x, w, mask, b, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "use_pallas"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int | None = None,
+                    use_pallas: bool = True) -> jax.Array:
+    """Blocked attention; GQA via Hq % Hkv == 0."""
+    if not use_pallas:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=not _on_tpu())

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lut_lookup_ref(codes: jax.Array, indices: jax.Array, table: jax.Array,
+                   bw_in: int) -> jax.Array:
+    """LogicNets LUT-layer inference.
+
+    codes:   (batch, in_features) int32 input activation codes
+    indices: (out_features, fan_in) int32 fan-in feature ids per neuron
+    table:   (out_features, 2^(fan_in*bw_in)) int32 output codes
+    returns: (batch, out_features) int32
+    """
+    gathered = codes[:, indices]                        # (B, O, FI)
+    shifts = bw_in * jnp.arange(indices.shape[1], dtype=jnp.int32)
+    entry = jnp.sum(gathered << shifts[None, None, :], axis=-1)  # (B, O)
+    return jnp.take_along_axis(table[None], entry[:, :, None], axis=2)[..., 0]
+
+
+def masked_matmul_ref(x: jax.Array, w: jax.Array, mask: jax.Array,
+                      b: jax.Array | None = None) -> jax.Array:
+    """Fan-in-masked linear: y = x @ (w * mask) (+ b)."""
+    y = jnp.dot(x, w * mask, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b
+    return y.astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, window: int | None = None,
+                        scale: float | None = None) -> jax.Array:
+    """Plain softmax attention with GQA head sharing.
+
+    q: (B, Hq, S, D); k, v: (B, Hkv, S, D); Hq % Hkv == 0.
+    ``window`` (if set) keeps only the last ``window`` keys per query
+    (sliding-window / local attention, gemma3-style).
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vq.astype(jnp.float32))
+    return out.astype(q.dtype)

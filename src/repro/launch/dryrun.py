@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import — jax locks the device
+count on first init, and the dry-run needs 512 host devices to build the
+production meshes ((16,16) single-pod, (2,16,16) multi-pod).
+
+Per cell this script:
+  1. builds abstract params/optimizer/cache (ShapeDtypeStruct — nothing is
+     allocated),
+  2. resolves sharding rules against the mesh,
+  3. ``jit(step).lower(...).compile()`` — a failure here (sharding
+     mismatch, OOM at compile, unsupported collective) is a bug in the
+     system, not in the script,
+  4. records memory_analysis / cost_analysis / collective bytes into a
+     JSON artifact for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod]
+  variants: --policy tp_only | --moe-dispatch sorted | --remat none|dots
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, cell_skip, get_config
+from repro.launch import steps as S
+from repro.launch.hlo_stats import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import MoECfg
+from repro.parallel import sharding as SH
+from repro.parallel.ctx import activation_sharding
+
+
+def _apply_variants(cfg, args, scan_unroll: int = 1):
+    changes = {"scan_unroll": scan_unroll, "attn_unroll": True}
+    if args.moe_dispatch and cfg.moe is not None:
+        changes["moe"] = dataclasses.replace(cfg.moe,
+                                             dispatch=args.moe_dispatch)
+    if args.remat:
+        changes["remat"] = args.remat
+    if args.attn_chunk:
+        changes["attn_chunk"] = args.attn_chunk
+    if args.cache_update:
+        changes["cache_update"] = args.cache_update
+    if args.logicnet_ffn:
+        from repro.models.config import LogicNetFFNCfg
+        changes["logicnet_ffn"] = LogicNetFFNCfg(fan_in=64, bw=4,
+                                                 max_val=4.0)
+    return dataclasses.replace(cfg, **changes)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, args,
+             scan_unroll: int = 1) -> dict:
+    cfg = _apply_variants(get_config(arch), args, scan_unroll)
+    cell = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": args.variant, "kind": cell.kind,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "seq_len": cell.seq_len, "global_batch": cell.global_batch,
+        "scan_unroll": scan_unroll,
+        "scan_length": cfg.scan_length,
+        "fit_unroll": cfg.fit_unroll,
+    }
+    skip = cell_skip(cfg, shape_name)
+    if skip:
+        record["status"] = "skipped"
+        record["skip_reason"] = skip
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    policy = (SH.multi_pod_policy(args.policy) if multi_pod
+              else SH.ShardingPolicy(mode=args.policy))
+    n_chips = mesh.devices.size
+    record["chips"] = n_chips
+
+    specs = S.input_specs(cfg, cell)
+    t0 = time.time()
+    with activation_sharding(mesh, SH.activation_rules(policy)):
+        if cell.kind == "train":
+            state = S.abstract_train_state(cfg)
+            state_sh = SH.shardings_for_tree(state, mesh, policy)
+            batch_sh = SH.batch_specs(policy, mesh, specs["batch"])
+            step = S.make_train_step(
+                cfg,
+                grad_shardings=state_sh["params"] if args.grad_rs
+                else None)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None))
+            lowered = jitted.lower(state, specs["batch"])
+        elif cell.kind == "prefill":
+            params = S.abstract_params(cfg)
+            params_sh = SH.shardings_for_tree(params, mesh, policy)
+            batch_sh = SH.batch_specs(policy, mesh, specs["batch"])
+            step = S.make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params, specs["batch"])
+        else:  # decode
+            params = S.abstract_params(cfg)
+            params_sh = SH.shardings_for_tree(params, mesh, policy)
+            cache_sh = SH.cache_specs(policy, mesh, specs["cache"],
+                                      cache_shard=args.cache_shard)
+            tok_sh = SH.batch_specs(policy, mesh,
+                                    {"tokens": specs["tokens"],
+                                     "pos": specs["pos"]})
+            step = S.make_decode_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(params_sh, cache_sh, tok_sh["tokens"],
+                              tok_sh["pos"]),
+                out_shardings=(None, cache_sh))
+            lowered = jitted.lower(params, specs["cache"],
+                                   specs["tokens"], specs["pos"])
+        record["lower_s"] = round(time.time() - t0, 1)
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        record["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            "generated_code_bytes":
+                getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    cost = compiled.cost_analysis() or {}
+    record["cost"] = {k: cost.get(k) for k in
+                      ("flops", "bytes accessed", "transcendentals",
+                       "optimal_seconds") if k in cost}
+    hlo = compiled.as_text()
+    record["collectives"] = collective_bytes(hlo)
+    record["hlo_kib"] = len(hlo) // 1024
+    record["status"] = "ok"
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_name} "
+          f"({args.variant}): OK  "
+          f"flops={record['cost'].get('flops', 0):.3e}  "
+          f"coll={record['collectives']['total']:.3e}B  "
+          f"compile={record['compile_s']}s")
+    print("  memory:", record.get("memory"))
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--policy", default="fsdp_tp",
+                    choices=["fsdp_tp", "tp_only"])
+    ap.add_argument("--moe-dispatch", default=None,
+                    choices=[None, "dense", "sorted", "sorted_local"])
+    ap.add_argument("--remat", default=None,
+                    choices=[None, "none", "dots", "full"])
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--cache-update", default=None,
+                    choices=[None, "onehot", "dus"])
+    ap.add_argument("--cache-shard", default="heads",
+                    choices=["heads", "seq"])
+    ap.add_argument("--grad-rs", action="store_true",
+                    help="constrain grads to param shardings "
+                         "(reduce-scatter instead of all-reduce)")
+    ap.add_argument("--logicnet-ffn", action="store_true",
+                    help="swap FFNs for the paper's sparse-quantized "
+                         "LogicNet-FFN (the technique cell)")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--fit", action="store_true",
+                    help="also compile at scan_unroll=u2 for the "
+                         "two-point while-loop cost fit")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose artifact is already ok")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                base = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                if args.variant != "baseline":
+                    base += f"__{args.variant}"
+                unrolls = [1]
+                if args.fit:
+                    from repro.configs import get_config as _gc
+                    unrolls.append(_gc(arch).fit_unroll)
+                for u in unrolls:
+                    tag = base + (f"__u{u}" if u > 1 else "")
+                    path = os.path.join(args.out, tag + ".json")
+                    if args.resume and os.path.exists(path):
+                        with open(path) as f:
+                            if json.load(f).get("status") in ("ok",
+                                                              "skipped"):
+                                continue
+                    try:
+                        rec = run_cell(arch, shape, mp, args,
+                                       scan_unroll=u)
+                    except Exception as e:  # a failure = a system bug
+                        failures += 1
+                        rec = {"arch": arch, "shape": shape,
+                               "mesh": "2x16x16" if mp else "16x16",
+                               "variant": args.variant, "scan_unroll": u,
+                               "status": "FAILED", "error": repr(e),
+                               "traceback": traceback.format_exc()}
+                        print(f"[dryrun] {tag}: FAILED {e!r}")
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=2)
+                    if rec.get("status") == "skipped":
+                        break  # no point re-running the skip at u2
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

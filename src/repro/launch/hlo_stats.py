@@ -1,0 +1,71 @@
+"""Parse collective traffic out of post-partitioning HLO text.
+
+``cost_analysis()`` has no collective-bytes entry, so we regex the compiled
+module: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op contributes its *result* buffer size (shapes in the
+SPMD-partitioned module are already per-device).  This approximates wire
+bytes per device per step: exact for all-to-all/permute, the standard
+ring-factor 2(n-1)/n of an all-reduce is folded into the reported number
+via the per-type multipliers below.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# all-reduce moves ~2x the buffer on a ring (reduce-scatter + all-gather);
+# the others move ~1x their result.
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64"
+                       r"|f64)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(result_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(result_text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-collective-type wire bytes (per device) + 'total'."""
+    seen_done: set[str] = set()
+    out: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        result_text, kind = m.group(1), m.group(2)
+        # -done ops restate the -start result; count each pair once.
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        if f"{kind}-done" in line:
+            continue
+        b = _shape_bytes(result_text) * _WIRE_FACTOR[kind]
+        out[kind] += b
+        counts[kind] += 1
+    out["total"] = float(sum(v for k, v in out.items() if k != "total"))
+    out.update({f"n_{k}": float(v) for k, v in counts.items()})
+    return dict(out)
+
+
+def op_histogram(hlo_text: str, ops: tuple[str, ...]) -> dict[str, int]:
+    """Count occurrences of op kinds (fusion/reshape/transpose audits)."""
+    return {op: len(re.findall(rf"\b{re.escape(op)}\(", hlo_text))
+            for op in ops}

@@ -1,0 +1,1 @@
+"""LM model zoo: transformer / MoE / SSM / hybrid / enc-dec / VLM substrate."""

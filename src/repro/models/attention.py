@@ -1,0 +1,189 @@
+"""GQA attention: chunked (flash-style) prefill in pure XLA + cached decode.
+
+The chunked path scans KV blocks with an online softmax so (S x S) logits
+never materialize — required for the 32k-prefill cells to fit HBM, and it is
+what the Pallas flash_attention kernel computes natively on TPU (the pure-XLA
+form keeps the 512-device dry-run HLO compact; the kernel is the TPU hot
+path).
+
+Supports qk-norm (qwen3), sliding windows incl. gemma3's per-layer
+local/global mix (dynamic window values), M-RoPE (qwen2-vl) and
+cross-attention (whisper).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelCfg
+from repro.models.layers import apply_mrope, apply_rope, init_rms, rms_norm
+
+NEG_INF = -1e30
+
+
+def attn_init(key: jax.Array, cfg: ModelCfg, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = 1.0 / jnp.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(kq, (d, cfg.n_heads, hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(kk, (d, cfg.n_kv_heads, hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(kv, (d, cfg.n_kv_heads, hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ko, (cfg.n_heads, hd, d)) * s).astype(dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms(hd)
+        p["k_norm"] = init_rms(hd)
+    return p
+
+
+def _project_qkv(p: dict, cfg: ModelCfg, x: jax.Array, positions: jax.Array,
+                 rope: bool = True):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        if cfg.mrope:
+            q = apply_mrope(q, positions, cfg.rope_theta)
+            k = apply_mrope(k, positions, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                       q_offset, window, causal: bool,
+                       chunk: int, kv_len_valid=None,
+                       unroll: bool = False) -> jax.Array:
+    """Online-softmax over KV chunks.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D).  ``window`` may be a traced
+    scalar (gemma3's per-layer local/global mix under scan); 0 = global.
+    ``kv_len_valid``: number of valid cache slots (decode); None = all.
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+    qf = (q.astype(jnp.float32) * scale).reshape(b, sq, hkv, group, d)
+    chunk = min(chunk, skv)
+    n_chunks = skv // chunk if skv % chunk == 0 else -(-skv // chunk)
+    window = jnp.asarray(window, jnp.int32)
+
+    def body(carry, ci):
+        acc, m, l = carry
+        off = ci * chunk
+        kc = jax.lax.dynamic_slice_in_dim(k, off, chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, off, chunk, axis=1)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf,
+                       kc.astype(jnp.float32))          # (B,Hkv,G,Sq,C)
+        qpos = q_offset + jnp.arange(sq)
+        kpos = off + jnp.arange(chunk)
+        mask = jnp.ones((sq, chunk), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        mask &= jnp.where(window > 0,
+                          kpos[None, :] > qpos[:, None] - window, True)
+        if kv_len_valid is not None:
+            mask &= kpos[None, :] < kv_len_valid
+        else:
+            mask &= (kpos[None, :] < skv)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((b, hkv, group, sq, d), jnp.float32)
+    m0 = jnp.full((b, hkv, group, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                  jnp.arange(n_chunks),
+                                  unroll=n_chunks if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d)
+    return out.astype(q.dtype)
+
+
+def attn_apply(p: dict, cfg: ModelCfg, x: jax.Array, positions: jax.Array,
+               window=0, causal: bool = True) -> jax.Array:
+    """Full-sequence (training / prefill) attention."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = _chunked_attention(q, k, v, q_offset=0, window=window,
+                             causal=causal, chunk=cfg.attn_chunk,
+                             unroll=cfg.attn_unroll)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"])
+
+
+def attn_decode(p: dict, cfg: ModelCfg, x: jax.Array, cache_k: jax.Array,
+                cache_v: jax.Array, pos: jax.Array, window=0
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a KV cache.
+
+    x: (B, 1, D); cache_{k,v}: (B, S_cache, Hkv, hd); pos: (B,) int32 current
+    position (number of tokens already in cache).
+    """
+    positions = pos[:, None]
+    if cfg.mrope:
+        # decode emits text tokens: all three M-RoPE streams advance together
+        positions = jnp.broadcast_to(positions[..., None],
+                                     (*positions.shape, 3))
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    if cfg.cache_update == "dus":
+        # O(one token) cache write: all rows share the step position
+        # (the lowered serve_step shape).  §Perf optimization: the onehot
+        # blend below rewrites the WHOLE cache every step.
+        zero = jnp.asarray(0, jnp.int32)
+        start = (zero, pos[0], zero, zero)
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k_new.astype(cache_k.dtype), start)
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v_new.astype(cache_v.dtype), start)
+    else:
+        # Per-row cache insert at `pos` via one-hot blend (scatter-free,
+        # SPMD-friendly; supports ragged positions for continuous
+        # batching).
+        oh = jax.nn.one_hot(pos, cache_k.shape[1],
+                            dtype=cache_k.dtype)[:, :, None, None]
+        cache_k = cache_k * (1 - oh) + oh * k_new.astype(cache_k.dtype)
+        cache_v = cache_v * (1 - oh) + oh * v_new.astype(cache_v.dtype)
+    out = _chunked_attention(q, cache_k.astype(q.dtype),
+                             cache_v.astype(q.dtype),
+                             q_offset=pos[0], window=window, causal=True,
+                             chunk=cfg.attn_chunk,
+                             kv_len_valid=pos[0] + 1,
+                             unroll=cfg.attn_unroll)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"]), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_apply(p: dict, cfg: ModelCfg, x: jax.Array,
+                     memory_k: jax.Array, memory_v: jax.Array) -> jax.Array:
+    """x: (B, Sq, D) queries; memory_{k,v}: (B, Sm, Hkv, hd) precomputed."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    out = _chunked_attention(q, memory_k, memory_v, q_offset=0, window=0,
+                             causal=False, chunk=cfg.attn_chunk,
+                             unroll=cfg.attn_unroll)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"])
+
+
+def cross_memory(p: dict, cfg: ModelCfg, memory: jax.Array):
+    """Precompute cross-attention K/V from encoder output."""
+    k = jnp.einsum("bsd,dhe->bshe", memory, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", memory, p["wv"])
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return k, v

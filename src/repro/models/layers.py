@@ -1,0 +1,144 @@
+"""Shared model building blocks: norms, RoPE (+M-RoPE), embeddings, FFN."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import LogicNetFFNCfg, ModelCfg
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale)).astype(dtype)
+
+
+def init_rms(d: int) -> jax.Array:
+    return jnp.zeros((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                           # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: tuple[int, int, int] = (16, 24, 24)) -> jax.Array:
+    """Qwen2-VL M-RoPE: 3 position streams (t, h, w) over head_dim sections.
+
+    x: (B, S, H, D); positions: (B, S, 3) int32.  ``sections`` are per-stream
+    half-dims summing to D/2 (scaled for small head dims).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    total = sum(sections)
+    sec = [max(1, s * half // total) for s in sections]
+    sec[-1] = half - sec[0] - sec[1]
+    freqs = rope_freqs(d, theta)                           # (D/2,)
+    # stream id per frequency slot
+    stream = jnp.concatenate([
+        jnp.full((sec[0],), 0), jnp.full((sec[1],), 1),
+        jnp.full((sec[2],), 2)]).astype(jnp.int32)
+    pos = jnp.take_along_axis(
+        positions, stream[None, None, :].repeat(positions.shape[1], 1),
+        axis=2).astype(jnp.float32)                        # (B, S, D/2)
+    angles = pos * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN (+ LogicNet-FFN, the paper's technique at LM scale)
+# ---------------------------------------------------------------------------
+
+def ffn_init(key: jax.Array, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / jnp.sqrt(d_model)
+    s_out = 1.0 / jnp.sqrt(d_ff)
+    return {
+        "wi_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "wi_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+
+
+def ffn_apply(p: dict, x: jax.Array, act_fn: str = "silu") -> jax.Array:
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[act_fn]
+    h = act(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    return h @ p["wo"]
+
+
+def logicnet_ffn_init(key: jax.Array, d_model: int, d_ff: int,
+                      cfg: LogicNetFFNCfg, dtype, seed: int = 0) -> dict:
+    """FFN with per-neuron fan-in masks + activation fake-quant (DESIGN §4).
+
+    The trainable half of LogicNets applied at scale: masks bound each
+    hidden neuron's fan-in; activations are quantized with an STE.  (Truth-
+    table conversion stays gated on fan_in*bw <= 24 bits.)
+    """
+    from repro.core.sparsity import apriori_mask
+    p = ffn_init(key, d_model, d_ff, dtype)
+    p["mask_in"] = apriori_mask(seed, d_model, d_ff,
+                                min(cfg.fan_in, d_model)).astype(dtype)
+    p["mask_out"] = apriori_mask(seed + 1, d_ff, d_model,
+                                 min(cfg.fan_in, d_ff)).astype(dtype)
+    return p
+
+
+def logicnet_ffn_apply(p: dict, x: jax.Array, cfg: LogicNetFFNCfg,
+                       act_fn: str = "silu") -> jax.Array:
+    from repro.core.quantize import QuantizerCfg, quantize
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[act_fn]
+    q = QuantizerCfg(cfg.bw, cfg.max_val)
+    xq = quantize(q, x.astype(jnp.float32)).value.astype(x.dtype)
+    h = act(xq @ (p["wi_gate"] * p["mask_in"])) * (xq @ (p["wi_up"]
+                                                         * p["mask_in"]))
+    hq = quantize(q, h.astype(jnp.float32)).value.astype(x.dtype)
+    return hq @ (p["wo"] * p["mask_out"])
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+
+def embed_init(key: jax.Array, vocab: int, d_model: int, dtype,
+               tie: bool) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"tok": (jax.random.normal(k1, (vocab, d_model)) * 0.02).astype(dtype)}
+    if not tie:
+        p["head"] = (jax.random.normal(k2, (vocab, d_model))
+                     * 0.02).astype(dtype)
+    return p
+
+
+def embed_lookup(p: dict, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return p["tok"][tokens].astype(compute_dtype)
+
+
+def lm_logits(p: dict, h: jax.Array, compute_dtype) -> jax.Array:
+    w = p.get("head", p["tok"]).astype(compute_dtype)
+    return jnp.einsum("bsd,vd->bsv", h, w)

@@ -1,0 +1,427 @@
+"""Unified model: init / forward / loss / prefill / decode for every arch.
+
+Layer stacks are scanned (``jax.lax.scan`` over stacked params) so the HLO
+stays compact for the 512-device dry-run; hybrids scan super-layers
+(zamba2: shared attention block + K mamba layers).  Remat policy per config.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as ATT
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.config import ModelCfg
+from repro.models.layers import (embed_init, embed_lookup, ffn_apply,
+                                 ffn_init, init_rms, lm_logits,
+                                 logicnet_ffn_apply, logicnet_ffn_init,
+                                 rms_norm)
+from repro.parallel.ctx import constrain
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def _cast_weights(p, cdt):
+    """Matrix params to the compute dtype; 1-D leaves (norm scales, biases,
+    a_log, ...) stay fp32 for numerics."""
+    return jax.tree.map(
+        lambda a: a.astype(cdt) if a.ndim >= 2 else a, p)
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Layer windows (gemma3 local:global mix)
+# ---------------------------------------------------------------------------
+
+def layer_windows(cfg: ModelCfg) -> jnp.ndarray:
+    """Per-layer sliding window: 0 = global. gemma3: N locals then 1 global."""
+    if cfg.local_global_ratio > 0:
+        r = cfg.local_global_ratio + 1
+        idx = jnp.arange(cfg.n_layers)
+        return jnp.where((idx % r) == (r - 1), 0, cfg.sliding_window)
+    return jnp.full((cfg.n_layers,), cfg.sliding_window, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _decoder_layer_init(key: jax.Array, cfg: ModelCfg, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": init_rms(cfg.d_model), "ln2": init_rms(cfg.d_model),
+         "attn": ATT.attn_init(k1, cfg, dtype)}
+    if cfg.moe is not None:
+        p["moe"] = MOE.moe_init(k2, cfg, dtype)
+    elif cfg.logicnet_ffn is not None:
+        p["ffn"] = logicnet_ffn_init(k2, cfg.d_model, cfg.d_ff,
+                                     cfg.logicnet_ffn, dtype)
+    else:
+        p["ffn"] = ffn_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _stack_init(key: jax.Array, n: int, fn) -> dict:
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def init_params(cfg: ModelCfg, key: jax.Array) -> dict[str, Any]:
+    dtype = _dtype(cfg.param_dtype)
+    ke, kl, ks, kf = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "embed": embed_init(ke, cfg.vocab, cfg.d_model, dtype,
+                            cfg.tie_embeddings),
+        "final_norm": init_rms(cfg.d_model),
+    }
+    if cfg.is_ssm:
+        params["ssm_layers"] = _stack_init(
+            kl, cfg.n_layers, lambda k: dict(
+                ln=init_rms(cfg.d_model),
+                ssm=SSM.ssm_init(k, cfg, dtype)))
+        if cfg.is_hybrid:
+            params["shared_attn"] = _decoder_layer_init(ks, cfg, dtype)
+    elif cfg.enc_dec:
+        params["pos_emb_enc"] = (jax.random.normal(
+            ks, (cfg.enc_frames, cfg.d_model)) * 0.01).astype(dtype)
+        params["enc_layers"] = _stack_init(
+            kl, cfg.n_enc_layers, lambda k: _enc_layer_init(k, cfg, dtype))
+        params["dec_layers"] = _stack_init(
+            kf, cfg.n_layers, lambda k: _dec_xattn_layer_init(k, cfg, dtype))
+        params["enc_final_norm"] = init_rms(cfg.d_model)
+    else:
+        params["layers"] = _stack_init(
+            kl, cfg.n_layers, lambda k: _decoder_layer_init(k, cfg, dtype))
+    return params
+
+
+def _enc_layer_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_rms(cfg.d_model), "ln2": init_rms(cfg.d_model),
+            "attn": ATT.attn_init(k1, cfg, dtype),
+            "ffn": ffn_init(k2, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _dec_xattn_layer_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": init_rms(cfg.d_model), "ln2": init_rms(cfg.d_model),
+            "ln3": init_rms(cfg.d_model),
+            "attn": ATT.attn_init(k1, cfg, dtype),
+            "xattn": ATT.attn_init(k2, cfg, dtype),
+            "ffn": ffn_init(k3, cfg.d_model, cfg.d_ff, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_block(p: dict, cfg: ModelCfg, h: jax.Array, positions, window):
+    p = _cast_weights(p, _dtype(cfg.compute_dtype))
+    h = constrain(h, ("act_batch", None, "act_embed"))
+    a = ATT.attn_apply(p["attn"], cfg, rms_norm(h, p["ln1"], cfg.norm_eps),
+                       positions, window=window)
+    h = h + a
+    hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        f, aux = MOE.moe_apply(p["moe"], cfg, hn)
+    elif cfg.logicnet_ffn is not None:
+        f, aux = logicnet_ffn_apply(p["ffn"], hn, cfg.logicnet_ffn), 0.0
+    else:
+        f, aux = ffn_apply(p["ffn"], hn, cfg.act_fn), 0.0
+    return h + f, aux
+
+
+def _forward_decoder(params, cfg: ModelCfg, h, positions):
+    windows = layer_windows(cfg)
+
+    def body(carry, xs):
+        h, aux = carry
+        layer_p, window = xs
+        h, a = _attn_block(layer_p, cfg, h, positions, window)
+        return (h, aux + a), None
+
+    body = _remat(body, cfg.remat)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.asarray(0.0, jnp.float32)),
+                               (params["layers"], windows),
+                               unroll=cfg.scan_unroll)
+    return h, aux
+
+
+def _n_sites(cfg: ModelCfg) -> int:
+    assert cfg.n_layers % cfg.hybrid_attn_every == 0, \
+        "hybrid stacks scan super-layers: n_layers % attn_every == 0"
+    return cfg.n_layers // cfg.hybrid_attn_every
+
+
+def _forward_ssm(params, cfg: ModelCfg, h, positions):
+    cdt = _dtype(cfg.compute_dtype)
+
+    def ssm_body(h, layer_p):
+        layer_p = _cast_weights(layer_p, cdt)
+        h = h + SSM.ssm_apply(layer_p["ssm"], cfg,
+                              rms_norm(h, layer_p["ln"], cfg.norm_eps))
+        return h, None
+
+    if not cfg.is_hybrid:
+        body = _remat(ssm_body, cfg.remat)
+        h, _ = jax.lax.scan(body, h, params["ssm_layers"],
+                            unroll=cfg.scan_unroll)
+        return h, 0.0
+
+    # zamba2 super-layers: [shared attn block, K mamba layers] x n_sites;
+    # the attention block's weights are re-used at every site (parameter
+    # sharing, as in the paper).  Remat wraps ONLY the super-layer body —
+    # nesting checkpoint around the inner scan too would recompute the
+    # mamba layers twice in backward and blows up partitioner compile time.
+    k = cfg.hybrid_attn_every
+    sites = _n_sites(cfg)
+    stacked = jax.tree.map(
+        lambda a: a.reshape(sites, k, *a.shape[1:]), params["ssm_layers"])
+
+    def super_body(h, site_layers):
+        h, _ = _attn_block(params["shared_attn"], cfg, h, positions,
+                           window=0)
+        h, _ = jax.lax.scan(ssm_body, h, site_layers, unroll=k)
+        return h, None
+
+    super_body = _remat(super_body, cfg.remat)
+    h, _ = jax.lax.scan(super_body, h, stacked, unroll=cfg.scan_unroll)
+    return h, 0.0
+
+
+def _forward_encoder(params, cfg: ModelCfg, frames):
+    h = frames + params["pos_emb_enc"][None, :frames.shape[1], :]
+    positions = jnp.broadcast_to(jnp.arange(frames.shape[1])[None],
+                                 frames.shape[:2])
+
+    def body(h, layer_p):
+        layer_p = _cast_weights(layer_p, _dtype(cfg.compute_dtype))
+        hn = rms_norm(h, layer_p["ln1"], cfg.norm_eps)
+        h = h + ATT.attn_apply(layer_p["attn"], cfg, hn, positions,
+                               window=0, causal=False)
+        hn = rms_norm(h, layer_p["ln2"], cfg.norm_eps)
+        h = h + ffn_apply(layer_p["ffn"], hn, cfg.act_fn)
+        return h, None
+
+    body = _remat(body, cfg.remat)
+    h, _ = jax.lax.scan(body, h, params["enc_layers"],
+                        unroll=cfg.scan_unroll)
+    return rms_norm(h, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _forward_encdec(params, cfg: ModelCfg, h, positions, frames):
+    memory = _forward_encoder(params, cfg, frames)
+
+    def body(carry, layer_p):
+        h = carry
+        layer_p = _cast_weights(layer_p, _dtype(cfg.compute_dtype))
+        hn = rms_norm(h, layer_p["ln1"], cfg.norm_eps)
+        h = h + ATT.attn_apply(layer_p["attn"], cfg, hn, positions,
+                               window=0, causal=True)
+        hn = rms_norm(h, layer_p["ln2"], cfg.norm_eps)
+        mk, mv = ATT.cross_memory(layer_p["xattn"], cfg, memory)
+        h = h + ATT.cross_attn_apply(layer_p["xattn"], cfg, hn, mk, mv)
+        hn = rms_norm(h, layer_p["ln3"], cfg.norm_eps)
+        h = h + ffn_apply(layer_p["ffn"], hn, cfg.act_fn)
+        return h, None
+
+    body = _remat(body, cfg.remat)
+    h, _ = jax.lax.scan(body, h, params["dec_layers"],
+                        unroll=cfg.scan_unroll)
+    return h, 0.0
+
+
+def _positions(cfg: ModelCfg, tokens: jax.Array) -> jax.Array:
+    b, s = tokens.shape
+    seq = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if not cfg.mrope:
+        return seq
+    # Qwen2-VL M-RoPE stub: vision tokens get (t=0, h, w) grid positions,
+    # text tokens sequential in all three streams.
+    v = cfg.vision_tokens
+    side = max(1, int(v ** 0.5))
+    t_pos = jnp.where(seq < v, 0, seq - v + side)
+    h_pos = jnp.where(seq < v, seq // side, seq - v + side)
+    w_pos = jnp.where(seq < v, seq % side, seq - v + side)
+    return jnp.stack([t_pos, h_pos, w_pos], axis=-1)
+
+
+def forward(params, cfg: ModelCfg, batch: dict[str, jax.Array],
+            last_only: bool = False) -> tuple[jax.Array, jax.Array]:
+    """batch: tokens (B,S) [+ vision_embeds | frames] -> (logits, aux).
+
+    ``last_only`` computes the LM head on the final position only (the
+    serving-prefill shape: the head matmul on 1 token, not S).
+    """
+    cdt = _dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    h = embed_lookup(params["embed"], tokens, cdt)
+    if cfg.vision_tokens > 0 and "vision_embeds" in batch:
+        v = cfg.vision_tokens
+        h = jnp.concatenate(
+            [batch["vision_embeds"].astype(cdt), h[:, v:, :]], axis=1)
+    positions = _positions(cfg, tokens)
+    h = constrain(h, ("act_batch", None, "act_embed"))
+    if cfg.is_ssm:
+        h, aux = _forward_ssm(params, cfg, h, positions)
+    elif cfg.enc_dec:
+        h, aux = _forward_encdec(params, cfg, h, positions,
+                                 batch["frames"].astype(cdt))
+    else:
+        h, aux = _forward_decoder(params, cfg, h, positions)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        h = h[:, -1:, :]
+    logits = lm_logits(params["embed"], h, cdt)
+    logits = constrain(logits, ("act_batch", None, "act_vocab"))
+    return logits, aux
+
+
+def loss_fn(params, cfg: ModelCfg, batch: dict[str, jax.Array]
+            ) -> jax.Array:
+    logits, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    return nll + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving): KV/SSM caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelCfg, batch: int, max_seq: int) -> dict:
+    hd = cfg.resolved_head_dim
+    cache: dict[str, Any] = {}
+    if cfg.is_ssm:
+        one = SSM.ssm_decode_state(cfg, batch)
+        cache["ssm"] = jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers, *a.shape), a.dtype), one)
+        if cfg.is_hybrid:
+            n_sites = _n_sites(cfg)
+            cache["shared_k"] = jnp.zeros(
+                (n_sites, batch, max_seq, cfg.n_kv_heads, hd), jnp.bfloat16)
+            cache["shared_v"] = jnp.zeros_like(cache["shared_k"])
+    else:
+        n = cfg.n_layers
+        cache["k"] = jnp.zeros((n, batch, max_seq, cfg.n_kv_heads, hd),
+                               jnp.bfloat16)
+        cache["v"] = jnp.zeros_like(cache["k"])
+        if cfg.enc_dec:
+            cache["mem_k"] = jnp.zeros(
+                (n, batch, cfg.enc_frames, cfg.n_kv_heads, hd), jnp.bfloat16)
+            cache["mem_v"] = jnp.zeros_like(cache["mem_k"])
+    return cache
+
+
+def decode_step(params, cfg: ModelCfg, cache: dict, tokens: jax.Array,
+                pos: jax.Array) -> tuple[jax.Array, dict]:
+    """One token for every sequence: tokens (B, 1), pos (B,)."""
+    cdt = _dtype(cfg.compute_dtype)
+    h = embed_lookup(params["embed"], tokens, cdt)
+    h = constrain(h, ("act_batch", None, "act_embed"))
+    windows = layer_windows(cfg)
+
+    if cfg.is_ssm:
+        def ssm_body(h, xs):
+            layer_p, ssm_state = xs
+            layer_p = _cast_weights(layer_p, _dtype(cfg.compute_dtype))
+            hn = rms_norm(h, layer_p["ln"], cfg.norm_eps)
+            y, new_state = SSM.ssm_decode(layer_p["ssm"], cfg, hn, ssm_state)
+            return h + y, new_state
+
+        if not cfg.is_hybrid:
+            h, new_states = jax.lax.scan(
+                ssm_body, h, (params["ssm_layers"], cache["ssm"]),
+                unroll=cfg.scan_unroll)
+            new_cache = dict(cache, ssm=new_states)
+        else:
+            k = cfg.hybrid_attn_every
+            sites = _n_sites(cfg)
+            stacked = jax.tree.map(
+                lambda a: a.reshape(sites, k, *a.shape[1:]),
+                (params["ssm_layers"], cache["ssm"]))
+
+            def super_body(h, xs):
+                site_layers, ck, cv = xs
+                sp = _cast_weights(params["shared_attn"],
+                                   _dtype(cfg.compute_dtype))
+                hn = rms_norm(h, sp["ln1"], cfg.norm_eps)
+                a, nk, nv = ATT.attn_decode(sp["attn"], cfg, hn, ck, cv,
+                                            pos)
+                h = h + a
+                hn = rms_norm(h, sp["ln2"], cfg.norm_eps)
+                h = h + ffn_apply(sp["ffn"], hn, cfg.act_fn)
+                h, new_states = jax.lax.scan(ssm_body, h, site_layers,
+                                             unroll=k)
+                return h, (new_states, nk, nv)
+
+            h, (new_states, nk, nv) = jax.lax.scan(
+                super_body, h,
+                (stacked, cache["shared_k"], cache["shared_v"]),
+                unroll=cfg.scan_unroll)
+            new_cache = dict(
+                cache,
+                ssm=jax.tree.map(
+                    lambda a: a.reshape(cfg.n_layers, *a.shape[2:]),
+                    new_states),
+                shared_k=nk, shared_v=nv)
+    else:
+        def body(carry, xs):
+            h = carry
+            layer_p, ck, cv, window, *xtra = xs
+            layer_p = _cast_weights(layer_p, _dtype(cfg.compute_dtype))
+            hn = rms_norm(h, layer_p["ln1"], cfg.norm_eps)
+            a, nk, nv = ATT.attn_decode(layer_p["attn"], cfg, hn, ck, cv,
+                                        pos, window=window)
+            h = h + a
+            if cfg.enc_dec:
+                mk, mv = xtra
+                hn = rms_norm(h, layer_p["ln2"], cfg.norm_eps)
+                h = h + ATT.cross_attn_apply(layer_p["xattn"], cfg, hn,
+                                             mk.astype(h.dtype),
+                                             mv.astype(h.dtype))
+                hn = rms_norm(h, layer_p["ln3"], cfg.norm_eps)
+                h = h + ffn_apply(layer_p["ffn"], hn, cfg.act_fn)
+            else:
+                hn = rms_norm(h, layer_p["ln2"], cfg.norm_eps)
+                if cfg.moe is not None:
+                    f, _ = MOE.moe_apply(layer_p["moe"], cfg, hn)
+                elif cfg.logicnet_ffn is not None:
+                    f = logicnet_ffn_apply(layer_p["ffn"], hn,
+                                           cfg.logicnet_ffn)
+                else:
+                    f = ffn_apply(layer_p["ffn"], hn, cfg.act_fn)
+                h = h + f
+            return h, (nk, nv)
+
+        layer_params = params.get("dec_layers", params.get("layers"))
+        xs = [layer_params, cache["k"], cache["v"], windows]
+        if cfg.enc_dec:
+            xs += [cache["mem_k"], cache["mem_v"]]
+        h, (nk, nv) = jax.lax.scan(body, h, tuple(xs),
+                                   unroll=cfg.scan_unroll)
+        new_cache = dict(cache, k=nk, v=nv)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], h, _dtype(cfg.compute_dtype))
+    logits = constrain(logits, ("act_batch", None, "act_vocab"))
+    return logits, new_cache

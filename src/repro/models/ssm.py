@@ -1,0 +1,198 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute inside length-``chunk`` blocks, linear state passing between blocks
+(a lax.scan).  Decode is the O(1)-per-token recurrence on the (H, P, N)
+state — what makes the long_500k cell feasible for mamba2/zamba2.
+
+Block layout (mamba2): in_proj -> [z | x | B | C | dt]; short causal
+depthwise conv on (x, B, C); SSD core; gated RMSNorm; out_proj.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelCfg
+from repro.models.layers import init_rms, rms_norm
+
+
+def _dims(cfg: ModelCfg):
+    ssm = cfg.ssm
+    d_in = ssm.expand * cfg.d_model
+    n_heads = d_in // ssm.head_dim
+    conv_dim = d_in + 2 * ssm.n_groups * ssm.d_state
+    return d_in, n_heads, conv_dim
+
+
+def ssm_init(key: jax.Array, cfg: ModelCfg, dtype) -> dict:
+    ssm = cfg.ssm
+    d = cfg.d_model
+    d_in, n_heads, conv_dim = _dims(cfg)
+    proj_dim = 2 * d_in + 2 * ssm.n_groups * ssm.d_state + n_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / jnp.sqrt(d)
+    return {
+        "in_proj": (jax.random.normal(k1, (d, proj_dim)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(k2, (ssm.conv_width, conv_dim))
+                   * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": init_rms(d_in),
+        "out_proj": (jax.random.normal(k4, (d_in, d))
+                     / jnp.sqrt(d_in)).astype(dtype),
+    }
+
+
+def _split_proj(cfg: ModelCfg, zxbcdt: jax.Array):
+    ssm = cfg.ssm
+    d_in, n_heads, _ = _dims(cfg)
+    gn = ssm.n_groups * ssm.d_state
+    z, x, b, c, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+    return z, x, b, c, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq; x (B, S, C), w (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + pad[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """(..., L) -> (..., L, L) lower-triangular segment sums."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    # S[i, j] = sum_{j < k <= i} a_k = cs[i] - cs[j]
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+                chunk: int, init_state: jax.Array | None = None):
+    """SSD scan (mamba2 Algorithm 1, chunked).
+
+    x: (B, S, H, P) pre-scaled by dt; a: (B, S, H) = dt * A (negative);
+    b, c: (B, S, G, N); heads grouped over G.  Returns (y, final_state).
+    """
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+    xf = x.astype(jnp.float32).reshape(bs, nc, chunk, h, p)
+    af = a.astype(jnp.float32).reshape(bs, nc, chunk, h).transpose(0, 3, 1, 2)
+    bf = b.astype(jnp.float32).reshape(bs, nc, chunk, g, n)
+    cf = c.astype(jnp.float32).reshape(bs, nc, chunk, g, n)
+    bfh = jnp.repeat(bf, rep, axis=3)                     # (B,NC,L,H,N)
+    cfh = jnp.repeat(cf, rep, axis=3)
+
+    a_cs = jnp.cumsum(af, axis=-1)                        # (B,H,NC,L)
+    # 1. intra-chunk (quadratic inside the chunk)
+    ll = jnp.exp(_segsum(af))                             # (B,H,NC,L,L)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp",
+                        cfh, bfh, ll, xf)
+    # 2. per-chunk end states
+    decay = jnp.exp(a_cs[..., -1:] - a_cs)                # (B,H,NC,L)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", bfh, decay, xf)
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cs[..., -1])                  # (B,H,NC)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                     # (B,H,P,N), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                 # emit previous
+
+    init = (jnp.zeros((bs, h, p, n), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (B,NC,H,P,N)
+    # 4. state -> output within chunk
+    state_decay = jnp.exp(a_cs)                           # (B,H,NC,L)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", cfh, prev_states,
+                       state_decay)
+    y = (y_diag + y_off).reshape(bs, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssm_apply(p: dict, cfg: ModelCfg, u: jax.Array) -> jax.Array:
+    """Full-sequence mamba2 block; u: (B, S, D)."""
+    ssm = cfg.ssm
+    d_in, n_heads, conv_dim = _dims(cfg)
+    z, x, b, c, dt = _split_proj(cfg, u @ p["in_proj"])
+    xbc = _causal_conv(jnp.concatenate([x, b, c], axis=-1),
+                       p["conv_w"], p["conv_b"])
+    x, b, c = jnp.split(xbc, [d_in, d_in + ssm.n_groups * ssm.d_state],
+                        axis=-1)
+    bs, s, _ = x.shape
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    xh = x.reshape(bs, s, n_heads, ssm.head_dim)
+    a = -jnp.exp(p["a_log"])[None, None, :] * dt                 # (B,S,H)
+    bg = b.reshape(bs, s, ssm.n_groups, ssm.d_state)
+    cg = c.reshape(bs, s, ssm.n_groups, ssm.d_state)
+    y, _ = ssd_chunked(xh * dt[..., None].astype(xh.dtype), a, bg, cg,
+                       min(ssm.chunk, s))
+    y = y + xh * p["d_skip"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(bs, s, d_in) * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(1) state recurrence
+# ---------------------------------------------------------------------------
+
+def ssm_decode_state(cfg: ModelCfg, batch: int):
+    """Zero decode state: (ssd state, conv ring buffer)."""
+    ssm = cfg.ssm
+    d_in, n_heads, conv_dim = _dims(cfg)
+    return {
+        "ssd": jnp.zeros((batch, n_heads, ssm.head_dim, ssm.d_state),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, ssm.conv_width - 1, conv_dim),
+                          jnp.float32),
+    }
+
+
+def ssm_decode(p: dict, cfg: ModelCfg, u: jax.Array, state: dict
+               ) -> tuple[jax.Array, dict]:
+    """One-token step; u: (B, 1, D)."""
+    ssm = cfg.ssm
+    d_in, n_heads, conv_dim = _dims(cfg)
+    z, x, b, c, dt = _split_proj(cfg, u @ p["in_proj"])
+    xbc = jnp.concatenate([x, b, c], axis=-1)[:, 0, :]    # (B, conv_dim)
+    # conv ring buffer
+    hist = jnp.concatenate([state["conv"],
+                            xbc[:, None, :].astype(jnp.float32)], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", hist,
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:, :]
+    x, b, c = jnp.split(conv_out, [d_in, d_in + ssm.n_groups * ssm.d_state],
+                        axis=-1)
+    bs = x.shape[0]
+    dt = jax.nn.softplus(dt[:, 0, :].astype(jnp.float32)
+                         + p["dt_bias"])                  # (B,H)
+    xh = x.reshape(bs, n_heads, ssm.head_dim).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])[None, :] * dt                # (B,H)
+    rep = n_heads // ssm.n_groups
+    bg = jnp.repeat(b.reshape(bs, ssm.n_groups, ssm.d_state), rep, axis=1)
+    cg = jnp.repeat(c.reshape(bs, ssm.n_groups, ssm.d_state), rep, axis=1)
+    da = jnp.exp(a)                                       # (B,H)
+    new_ssd = state["ssd"] * da[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xh * dt[..., None], bg)
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssd, cg)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bs, 1, d_in).astype(u.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], {"ssd": new_ssd, "conv": new_conv}

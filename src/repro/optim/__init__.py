@@ -1,0 +1,2 @@
+"""Training substrate: AdamW (masked, mixed-precision), schedules,
+gradient accumulation and compression."""

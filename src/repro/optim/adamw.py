@@ -1,0 +1,125 @@
+"""AdamW from scratch: pytree-native, mask-aware, mixed-precision.
+
+* m/v moments in fp32 regardless of param dtype (bf16-safe).
+* Path-based policies instead of parallel trees (no structure headaches):
+  - ``freeze_fn(path) -> bool``       : leaf gets no update.  Default
+    freezes any leaf whose path mentions 'mask' — LogicNets fan-in masks
+    live inside the param tree and must never be optimized.
+  - ``mask_fn(path, params) -> array | None`` : binary mask applied to the
+    leaf's gradient *and* post-update value, keeping pruned weights exactly
+    zero (the per-neuron sparsity invariant survives training).
+* Global-norm clipping; decoupled weight decay; any schedule fn.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.tree_util import tree_map_with_path, keystr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWCfg:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    schedule: Callable[[jax.Array], jax.Array] | None = None
+
+
+def default_freeze(path: str) -> bool:
+    return "mask" in path
+
+
+def init_opt_state(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWCfg, params: Any, grads: Any, state: dict,
+                 mask_fn: Callable[[str, Any], Any] | None = None,
+                 freeze_fn: Callable[[str], bool] = default_freeze,
+                 ) -> tuple[Any, dict]:
+    step = state["step"] + 1
+    lr = cfg.lr if cfg.schedule is None else cfg.lr * cfg.schedule(step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.clip_norm > 0 else jnp.asarray(1.0)
+
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        spath = keystr(path)
+        if freeze_fn(spath):
+            return p, m, v
+        mask = mask_fn(spath, params) if mask_fn is not None else None
+        g = g.astype(jnp.float32) * scale
+        if mask is not None:
+            g = g * mask.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        delta = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if cfg.weight_decay > 0 and p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        if mask is not None:
+            new_p = new_p * mask.astype(jnp.float32)
+        return new_p.astype(p.dtype), m, v
+
+    out = tree_map_with_path(upd, params, grads, state["m"], state["v"])
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(warmup: int, total: int,
+                    floor: float = 0.1) -> Callable:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def logicnet_mask_fn(path: str, params: Any):
+    """Mask rule for LM-scale LogicNet-FFN layers: weight leaves named
+    wi_gate/wi_up/wo with sibling masks get the sibling mask applied."""
+    import re
+    m = re.search(r"(.*)\['(wi_gate|wi_up|wo)'\]$", path)
+    if m is None:
+        return None
+    # Resolve the sibling mask in the params tree.
+    prefix, leaf = m.group(1), m.group(2)
+    keys = re.findall(r"\['([^']+)'\]", prefix)
+    node = params
+    for k in keys:
+        node = node[k]
+    if not isinstance(node, dict):
+        return None
+    name = "mask_out" if leaf == "wo" else "mask_in"
+    return node.get(name)

@@ -1,0 +1,45 @@
+"""Activation-sharding context.
+
+Model code annotates activations with *logical* axis names
+(``constrain(x, ("act_batch", None, "act_vocab"))``); the launch layer
+activates a mesh + rule set that maps logical names to mesh axes.  With no
+active context the calls are no-ops, so the same model code runs single-
+device smoke tests and 512-device dry-runs unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: dict[str, tuple | str | None]):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current() -> tuple[Mesh, dict] | None:
+    return getattr(_STATE, "ctx", None)
+
+
+def constrain(x: jax.Array, logical: tuple) -> jax.Array:
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = []
+    for name in logical:
+        axes = rules.get(name) if name is not None else None
+        spec.append(axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

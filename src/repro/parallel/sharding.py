@@ -1,0 +1,194 @@
+"""Sharding rules: param-path regexes -> PartitionSpecs, shape-validated.
+
+Policy tokens per tensor dimension:
+  'fsdp' -> the data(-and-pod) axes: ZeRO-3 style weight sharding; XLA
+            inserts per-layer all-gathers and grad reduce-scatters.
+  'tp'   -> the model axis: tensor/expert parallelism.
+  None   -> replicated.
+
+Rules are *candidates*: at resolution each dim's axes are dropped unless
+the dim is divisible by the axis product (e.g. 4 KV heads cannot shard a
+16-way model axis -> replicated, the standard GQA fallback).  This is what
+lets one rule set serve 10 architectures x arbitrary meshes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import tree_map_with_path, keystr
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Maps rule tokens to mesh axes."""
+
+    fsdp: tuple[str, ...] = ("data",)
+    tp: tuple[str, ...] = ("model",)
+    # 'fsdp_tp' shards weights over both; 'tp_only' replicates over data
+    # (pure TP — a §Perf comparison point).
+    mode: str = "fsdp_tp"
+
+    def axes_for(self, token) -> tuple[str, ...] | None:
+        if token is None:
+            return None
+        if token == "tp":
+            return self.tp
+        if token == "fsdp":
+            return None if self.mode == "tp_only" else self.fsdp
+        if token == "dp":
+            return self.fsdp
+        raise ValueError(token)
+
+
+def multi_pod_policy(mode: str = "fsdp_tp") -> ShardingPolicy:
+    return ShardingPolicy(fsdp=("pod", "data"), tp=("model",), mode=mode)
+
+
+# (path regex, per-dim tokens).  Stacked layer params carry a leading
+# layer dim (always None).  First match wins.
+PARAM_RULES: list[tuple[str, tuple]] = [
+    # embeddings: vocab over tp (sharded logits), d_model over fsdp
+    (r"\['embed'\]\['(tok|head)'\]$", ("tp", "fsdp")),
+    (r"\['pos_emb_enc'\]$", (None, "fsdp")),
+    # attention
+    (r"\['attn'\]\['wq'\]$", (None, "fsdp", "tp", None)),
+    (r"\['attn'\]\['w[kv]'\]$", (None, "fsdp", "tp", None)),
+    (r"\['attn'\]\['wo'\]$", (None, "tp", None, "fsdp")),
+    (r"\['(xattn)'\]\['wq'\]$", (None, "fsdp", "tp", None)),
+    (r"\['(xattn)'\]\['w[kv]'\]$", (None, "fsdp", "tp", None)),
+    (r"\['(xattn)'\]\['wo'\]$", (None, "tp", None, "fsdp")),
+    (r"\['(q_norm|k_norm)'\]$", None),                     # tiny: replicate
+    # dense FFN (LogicNet-FFN masks shard like their weights — replicating
+    # them cost 16 GiB/chip at the qwen3-1.7b technique cell, §Perf HC3)
+    (r"\['ffn'\]\['wi_(gate|up)'\]$", (None, "fsdp", "tp")),
+    (r"\['ffn'\]\['mask_in'\]$", (None, "fsdp", "tp")),
+    (r"\['ffn'\]\['wo'\]$", (None, "tp", "fsdp")),
+    (r"\['ffn'\]\['mask_out'\]$", (None, "tp", "fsdp")),
+    # MoE: experts over tp (EP), d_model over fsdp
+    (r"\['moe'\]\['router'\]$", (None, "fsdp", None)),
+    (r"\['moe'\]\['wi_(gate|up)'\]$", (None, "tp", "fsdp", None)),
+    (r"\['moe'\]\['wo'\]$", (None, "tp", None, "fsdp")),
+    # SSM
+    (r"\['ssm'\]\['in_proj'\]$", (None, "fsdp", "tp")),
+    (r"\['ssm'\]\['conv_w'\]$", (None, None, "tp")),
+    (r"\['ssm'\]\['conv_b'\]$", (None, "tp")),
+    (r"\['ssm'\]\['out_proj'\]$", (None, "tp", "fsdp")),
+    (r"\['ssm'\]\['(a_log|d_skip|dt_bias|norm)'\]$", None),
+    # shared (unstacked) hybrid attention block: same but no layer dim
+    (r"\['shared_attn'\].*\['wq'\]$", ("fsdp", "tp", None)),
+    (r"\['shared_attn'\].*\['w[kv]'\]$", ("fsdp", "tp", None)),
+    (r"\['shared_attn'\].*\['wo'\]$", ("tp", None, "fsdp")),
+    (r"\['shared_attn'\]\['ffn'\]\['wi_(gate|up)'\]$", ("fsdp", "tp")),
+    (r"\['shared_attn'\]\['ffn'\]\['wo'\]$", ("tp", "fsdp")),
+    # norms and anything small: replicated
+    (r".*", None),
+]
+
+
+def _mesh_axis_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def resolve_spec(shape: tuple[int, ...], tokens, policy: ShardingPolicy,
+                 mesh: Mesh) -> P:
+    """Validated PartitionSpec: drop axes that don't divide the dim."""
+    if tokens is None:
+        return P()
+    # Right-align tokens to the shape (stacked layer params gained a
+    # leading layer axis relative to the per-layer rule).
+    tokens = tuple(tokens)
+    if len(tokens) < len(shape):
+        tokens = (None,) * (len(shape) - len(tokens)) + tokens
+    elif len(tokens) > len(shape):
+        tokens = tokens[-len(shape):]
+    spec = []
+    for dim, tok in zip(shape, tokens):
+        axes = policy.axes_for(tok)
+        if axes is None or dim % _mesh_axis_size(mesh, axes) != 0:
+            spec.append(None)
+        else:
+            spec.append(axes if len(axes) > 1 else axes[0])
+    return P(*spec)
+
+
+def spec_for_path(path: str, shape: tuple[int, ...],
+                  policy: ShardingPolicy, mesh: Mesh) -> P:
+    for pattern, tokens in PARAM_RULES:
+        if re.search(pattern, path):
+            return resolve_spec(shape, tokens, policy, mesh)
+    return P()
+
+
+def shardings_for_tree(tree: Any, mesh: Mesh,
+                       policy: ShardingPolicy) -> Any:
+    """Pytree of NamedShardings for a pytree of arrays/ShapeDtypeStructs."""
+    def one(path, leaf):
+        spec = spec_for_path(keystr(path), tuple(leaf.shape), policy, mesh)
+        return NamedSharding(mesh, spec)
+    return tree_map_with_path(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache / activation shardings
+# ---------------------------------------------------------------------------
+
+def batch_specs(policy: ShardingPolicy, mesh: Mesh,
+                batch_shapes: Any) -> Any:
+    """Inputs: leading batch dim over dp axes (dropped if not divisible)."""
+    def one(path, leaf):
+        dims = len(leaf.shape)
+        tokens = ("dp",) + (None,) * (dims - 1)
+        return NamedSharding(mesh,
+                             resolve_spec(leaf.shape, tokens, policy, mesh))
+    return tree_map_with_path(one, batch_shapes)
+
+
+def cache_specs(policy: ShardingPolicy, mesh: Mesh, cache_shapes: Any,
+                cache_shard: str = "heads") -> Any:
+    """KV/SSM caches: (L, B, S, H, D)-style.
+
+    cache_shard='heads' (baseline): batch over dp, kv-heads over tp (with
+    the GQA divisibility fallback -> replicated when kv_heads < tp size).
+    cache_shard='seq' (§Perf 'seqshard'): shard the sequence dim over tp —
+    always divisible, removes the kv-head replication that put a 32k x
+    batch-128 cache at 56 GiB/chip.  Attention over a seq-sharded cache
+    becomes a partial-softmax + all-reduce (flash-style distributed
+    attention), which XLA inserts from the shardings.
+    Batch=1 long-decode cells always fall back to seq sharding.
+    """
+    def one(path, leaf):
+        shape = leaf.shape
+        ps = keystr(path)
+        dims = len(shape)
+        if "ssm" in ps:
+            # (L, B, H, P, N) state / (L, B, W, C) conv: heads/channels tp
+            tokens = (None, "dp") + (("tp",) + (None,) * (dims - 3)
+                                     if dims >= 3 else ())
+        else:
+            # (L/sites, B, S, Hkv, hd)
+            tokens = [None, "dp", None, "tp", None][:dims]
+            dp_size = _mesh_axis_size(mesh, policy.fsdp)
+            if cache_shard == "seq" or shape[1] % dp_size != 0:
+                tokens[2] = "tp"
+                tokens[3] = None
+            tokens = tuple(tokens)
+        return NamedSharding(mesh,
+                             resolve_spec(shape, tokens, policy, mesh))
+    return tree_map_with_path(one, cache_shapes)
+
+
+def activation_rules(policy: ShardingPolicy) -> dict[str, Any]:
+    """Logical activation axis names -> mesh axes (parallel.ctx rules)."""
+    fsdp = policy.fsdp
+    return {
+        "act_batch": fsdp if len(fsdp) > 1 else fsdp[0],
+        "act_embed": None,
+        "act_vocab": policy.tp[0] if len(policy.tp) == 1 else policy.tp,
+        "act_heads": policy.tp[0] if len(policy.tp) == 1 else policy.tp,
+    }

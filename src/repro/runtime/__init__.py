@@ -1,0 +1,3 @@
+"""Fault-tolerant training runtime."""
+
+from repro.runtime.loop import TrainLoop, TrainLoopCfg  # noqa: F401

@@ -1,0 +1,104 @@
+"""Fault-tolerant train loop: checkpoint/restart, NaN guard, elastic restore.
+
+What runs here (and is unit-tested on CPU):
+  * periodic async checkpoints (keep-k, atomic) + exact restore of
+    (params, opt state, step) — restart resumes bit-identically;
+  * NaN/inf step guard: a bad step is *skipped* (state not committed) and
+    counted; too many consecutive bad steps aborts to last checkpoint;
+  * deterministic per-host data sharding keyed by (seed, step, host) — a
+    restarted or re-sharded job never replays/skips data;
+  * elastic restore: checkpoints are mesh-agnostic host arrays; restoring
+    onto a different device count re-shards via the sharding_fn hook.
+
+What can only be described here (no fleet on this container), and how the
+design covers it:
+  * node failure: single-controller SPMD fails the step; the operator (or
+    a supervisor like borg/k8s) restarts the job, which calls
+    ``restore_latest`` — bounded loss = checkpoint interval;
+  * stragglers: the step is a global barrier; mitigation = (a) async
+    checkpoint writes off the critical path (implemented), (b) the
+    microbatch grain is per-host so a hot spare replacing a slow host
+    changes nothing semantically (data is host-indexed, not rank-pinned),
+    (c) gradient compression (optim/compress.py) shrinks the cross-pod
+    reduction that magnifies jitter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+log = logging.getLogger("repro.runtime")
+
+
+@dataclasses.dataclass
+class TrainLoopCfg:
+    ckpt_dir: str
+    ckpt_every: int = 100
+    keep: int = 3
+    async_save: bool = True
+    max_bad_steps: int = 10
+
+
+class TrainLoop:
+    """Drives step_fn over a data stream with checkpoint/restart."""
+
+    def __init__(self, cfg: TrainLoopCfg,
+                 step_fn: Callable[[Any, dict], tuple[Any, jax.Array]],
+                 state: Any):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.state = state
+        self.step = 0
+        self.bad_steps = 0
+        self.metrics: list[tuple[int, float]] = []
+        self.mgr = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep,
+                                     async_save=cfg.async_save)
+
+    def try_restore(self, sharding_fn=None) -> bool:
+        out = self.mgr.restore_latest(
+            {"state": self.state, "step": np.asarray(self.step)},
+            sharding_fn)
+        if out is None:
+            return False
+        ckpt_step, tree = out
+        self.state = tree["state"]
+        self.step = int(tree["step"])
+        log.info("restored checkpoint at step %d", self.step)
+        return True
+
+    def run(self, batches: Callable[[int], dict], n_steps: int) -> Any:
+        while self.step < n_steps:
+            batch = batches(self.step)
+            new_state, loss = self.step_fn(self.state, batch)
+            loss_val = float(jax.device_get(loss))
+            if not np.isfinite(loss_val):
+                # Skip the step: do not commit state. Deterministic data
+                # means a post-restart replay hits the same batch, so we
+                # also advance past it.
+                self.bad_steps += 1
+                log.warning("non-finite loss at step %d (%d consecutive)",
+                            self.step, self.bad_steps)
+                if self.bad_steps >= self.cfg.max_bad_steps:
+                    raise FloatingPointError(
+                        f"{self.bad_steps} consecutive non-finite steps; "
+                        "restore from checkpoint and lower lr")
+                self.step += 1
+                continue
+            self.bad_steps = 0
+            self.state = new_state
+            self.metrics.append((self.step, loss_val))
+            self.step += 1
+            if self.step % self.cfg.ckpt_every == 0:
+                self.mgr.save(self.step,
+                              {"state": self.state,
+                               "step": np.asarray(self.step)})
+        self.mgr.wait()
+        return self.state

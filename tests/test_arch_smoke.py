@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests: reduced same-family configs, one real
+forward/train step + one decode step on CPU — shapes and finiteness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.launch.steps import (input_specs, make_decode_step,
+                                make_prefill_step, make_train_state,
+                                make_train_step)
+from repro.models import model as M
+
+
+def _toy_batch(cfg, batch=2, seq=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    b = {"tokens": jax.random.randint(key, (batch, seq), 0, cfg.vocab),
+         "labels": jax.random.randint(key, (batch, seq), 0, cfg.vocab)}
+    if cfg.vision_tokens > 0:
+        b["vision_embeds"] = jax.random.normal(
+            key, (batch, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.enc_dec:
+        b["frames"] = jax.random.normal(
+            key, (batch, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    state = make_train_state(cfg, jax.random.PRNGKey(0))
+    batch = _toy_batch(cfg, batch=2, seq=32)
+    logits, aux = M.forward(state["params"], cfg, batch)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    step = jax.jit(make_train_step(cfg))
+    new_state, loss = step(state, batch)
+    assert np.isfinite(float(loss))
+    # params actually moved
+    moved = jax.tree.reduce(
+        lambda a, b: a or b,
+        jax.tree.map(lambda a, b: bool(jnp.any(a != b)),
+                     state["params"], new_state["params"]))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    state = make_train_state(cfg, jax.random.PRNGKey(1))
+    batch_sz, cache_len = 2, 64
+    cache = M.init_cache(cfg, batch_sz, cache_len)
+    tokens = jnp.zeros((batch_sz, 1), jnp.int32)
+    pos = jnp.zeros((batch_sz,), jnp.int32)
+    step = jax.jit(make_decode_step(cfg))
+    logits, new_cache = step(state["params"], cache, tokens, pos)
+    assert logits.shape == (batch_sz, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_exact_values(arch):
+    """The full configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "mamba2-370m": (48, 1024, 16, 16, 0, 50280),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expected
+    if arch == "qwen3-moe-235b-a22b":
+        assert (cfg.moe.n_experts, cfg.moe.top_k) == (128, 8)
+        # ~235B total, ~22B active
+        assert 2.0e11 < cfg.param_count() < 2.6e11
+        assert 1.7e10 < cfg.active_param_count() < 2.7e10
+    if arch == "olmoe-1b-7b":
+        assert (cfg.moe.n_experts, cfg.moe.top_k) == (64, 8)
+        assert 5e9 < cfg.param_count() < 9e9           # ~7B total
+        assert 0.7e9 < cfg.active_param_count() < 1.7e9  # ~1B active
+    if arch == "zamba2-2.7b":
+        assert cfg.ssm.d_state == 64 and cfg.hybrid_attn_every == 6
+    if arch == "mamba2-370m":
+        assert cfg.ssm.d_state == 128
+        assert 2.5e8 < cfg.param_count() < 5e8
+    if arch == "gemma3-27b":
+        assert cfg.local_global_ratio == 5
+        assert 2.2e10 < cfg.param_count() < 3.2e10
+
+
+def test_shape_cells_and_skips():
+    from repro.configs import SHAPES, cell_skip
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["long_500k"].seq_len == 524288
+    # long_500k runs only for SSM/hybrid
+    assert cell_skip(get_config("mamba2-370m"), "long_500k") is None
+    assert cell_skip(get_config("zamba2-2.7b"), "long_500k") is None
+    assert cell_skip(get_config("gemma3-27b"), "long_500k") is not None
+    assert cell_skip(get_config("qwen3-1.7b"), "long_500k") is not None
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_all_cells(arch):
+    from repro.configs import SHAPES, cell_skip
+    cfg = get_config(arch)
+    for name, cell in SHAPES.items():
+        if cell_skip(cfg, name):
+            continue
+        specs = input_specs(cfg, cell)
+        leaves = jax.tree.leaves(specs)
+        assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+        if cell.kind != "decode":
+            assert specs["batch"]["tokens"].shape == (cell.global_batch,
+                                                      cell.seq_len)

@@ -1,0 +1,47 @@
+"""Unit tests for the collective-traffic HLO parser (roofline input)."""
+
+import textwrap
+
+from repro.launch.hlo_stats import collective_bytes, op_histogram
+
+
+HLO = textwrap.dedent("""
+  %all-reduce.5 = f32[1024,128]{1,0} all-reduce(f32[1024,128]{1,0} %add.3)
+  %ag = bf16[256,512]{1,0} all-gather(bf16[128,512]{1,0} %p0)
+  %rs.1 = f32[64]{0} reduce-scatter(f32[512]{0} %x)
+  %a2a = (f32[8,16]{1,0}, f32[8,16]{1,0}) all-to-all(f32[8,16] %a, f32[8,16] %b)
+  %cp = u32[4]{0} collective-permute(u32[4]{0} %c)
+  %dot.1 = f32[10,10]{1,0} dot(f32[10,10] %l, f32[10,10] %r)
+  %ar-start = f32[32]{0} all-reduce-start(f32[32]{0} %y)
+  %ar-done = f32[32]{0} all-reduce-done(f32[32]{0} %ar-start)
+""")
+
+
+def test_collective_bytes_by_type():
+    out = collective_bytes(HLO)
+    # all-reduce: (1024*128*4 + 32*4[start]) * 2x ring
+    assert out["all-reduce"] == (1024 * 128 * 4 + 32 * 4) * 2.0
+    assert out["all-gather"] == 256 * 512 * 2
+    assert out["reduce-scatter"] == 64 * 4
+    assert out["all-to-all"] == 2 * 8 * 16 * 4     # tuple result
+    assert out["collective-permute"] == 4 * 4
+    assert out["total"] == sum(v for k, v in out.items()
+                               if k in ("all-reduce", "all-gather",
+                                        "reduce-scatter", "all-to-all",
+                                        "collective-permute"))
+
+
+def test_done_ops_not_double_counted():
+    out = collective_bytes(HLO)
+    assert out["n_all-reduce"] == 2     # .5 and -start; -done skipped
+
+
+def test_empty_module():
+    out = collective_bytes("%add = f32[2] add(f32[2] %a, f32[2] %b)")
+    assert out["total"] == 0.0
+
+
+def test_op_histogram():
+    h = op_histogram(HLO, ("dot", "all-gather"))
+    assert h["dot"] == 1
+    assert h["all-gather"] == 1

@@ -1,0 +1,109 @@
+"""Analytical LUT cost model vs the paper's own numbers (Tables 2.1, 6.1)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lut_cost as lc
+from repro.core.logicnet import LogicNetCfg
+
+
+# Table 2.1, byte-exact.
+TABLE_2_1 = [
+    # fan-in, n 6-LUTs, truth-table bits, LUT config bits, % utilized
+    (6, 1, 64, 64, 100.0),
+    (7, 3, 128, 192, 66.67),
+    (8, 5, 256, 320, 80.0),
+    (9, 11, 512, 704, 72.73),
+    (10, 21, 1024, 1344, 76.19),
+    (11, 43, 2048, 2752, 74.42),
+]
+
+
+@pytest.mark.parametrize("fan_in,n,tt,cfg,pct", TABLE_2_1)
+def test_table_2_1_exact(fan_in, n, tt, cfg, pct):
+    row = lc.static_mapping_row(fan_in)
+    assert row.n_6luts == n
+    assert row.truth_table_bits == tt
+    assert row.lut_config_bits == cfg
+    assert abs(row.pct_utilized - pct) < 0.01
+
+
+@given(n=st.integers(min_value=6, max_value=40),
+       m=st.integers(min_value=1, max_value=16))
+@settings(max_examples=200, deadline=None)
+def test_closed_form_matches_recursion(n, m):
+    """Eq. (2.3) closed form == eq. (2.1) recursion."""
+    assert lc.lut_cost(n, m) == lc.lut_cost_recursive(n, m)
+
+
+@given(n=st.integers(min_value=6, max_value=40))
+@settings(max_examples=100, deadline=None)
+def test_cost_is_integer_and_monotone(n):
+    assert lc.lut_cost_per_bit(n + 1) > lc.lut_cost_per_bit(n) >= 1
+    # (2^(N-4) - (-1)^N) must be divisible by 3 for the formula to be exact
+    assert (2 ** (n - 4) - (-1) ** n) % 3 == 0
+
+
+def test_naive_truth_table_bits():
+    # §1.2: 16-bit fixed point, fan-in 3 neuron => f: B^48 -> B^16,
+    # "around 4.50e15 bits of storage" (output-only accounting).
+    assert lc.truth_table_output_bits(48, 16) == pytest.approx(4.50e15,
+                                                               rel=0.01)
+    # §3 accounting stores inputs too: 2^ip * (op + ip).
+    assert lc.truth_table_bits(48, 16) == (2 ** 48) * 64
+
+
+def test_model_a_layer_luts_exact():
+    """Table 6.1 Model A: HL (64,64,64), BW 3, X 3 -> 2112 per sparse layer."""
+    cfg = LogicNetCfg(in_features=16, n_classes=5, hidden=(64, 64, 64),
+                      fan_in=3, bw=3, final_dense=True, bw_fc=3)
+    assert cfg.luts()[:3] == [2112, 2112, 2112]
+
+
+def test_model_b_layer_luts_exact():
+    """Table 6.1 Model B: HL (128,64,32), BW 3, X 3 -> 4224/2112/1056."""
+    cfg = LogicNetCfg(in_features=16, n_classes=5, hidden=(128, 64, 32),
+                      fan_in=3, bw=3, final_dense=True, bw_fc=3)
+    assert cfg.luts()[:3] == [4224, 2112, 1056]
+
+
+def test_model_c_layer_luts_exact():
+    """Table 6.1 Model C: HL (64,32,32), BW 2, X 3 -> 128/64/64."""
+    cfg = LogicNetCfg(in_features=16, n_classes=5, hidden=(64, 32, 32),
+                      fan_in=3, bw=2, final_dense=True, bw_fc=2)
+    assert cfg.luts()[:3] == [128, 64, 64]
+
+
+def test_model_d_layer_luts_exact():
+    """Table 6.1 Model D: HL (64,32,32), BW 2, X 5, X_fc 6, BW_fc 4
+    -> 2688/1344/1344/3400 (all four sparse)."""
+    cfg = LogicNetCfg(in_features=16, n_classes=5, hidden=(64, 32, 32),
+                      fan_in=5, bw=2, final_dense=False, fan_in_fc=6,
+                      bw_fc=4)
+    assert cfg.luts() == [2688, 1344, 1344, 3400]
+
+
+def test_model_e_layer_luts_exact():
+    """Table 6.1 Model E: HL (64,64,64), BW 2, X 4, X_fc 4, BW_fc 4
+    -> 640/640/640/200."""
+    cfg = LogicNetCfg(in_features=16, n_classes=5, hidden=(64, 64, 64),
+                      fan_in=4, bw=2, final_dense=False, fan_in_fc=4,
+                      bw_fc=4)
+    assert cfg.luts() == [640, 640, 640, 200]
+
+
+def test_dense_cost_formula():
+    # eq. 4.1 sanity: n(O)*(n(I)*BWin*BWwt*1.0699 + 10.779)
+    assert lc.dense_quant_linear_cost(5, 32, 2, 4) == pytest.approx(
+        5 * (32 * 2 * 4 * 1.0699 + 10.779))
+
+
+def test_skip_connections_do_not_change_sparse_cost():
+    """§7: 'As long as the per neuron fan-in remains the same, the LUT cost
+    remains the same' — skips are LUT-free."""
+    base = LogicNetCfg(in_features=16, n_classes=5, hidden=(64, 64, 64),
+                       fan_in=3, bw=3, final_dense=True, bw_fc=3)
+    skip = LogicNetCfg(in_features=16, n_classes=5, hidden=(64, 64, 64),
+                       fan_in=3, bw=3, final_dense=True, bw_fc=3,
+                       skips=((0, 2),))
+    assert base.luts()[:3] == skip.luts()[:3]

@@ -1,0 +1,79 @@
+"""Quantizer unit + property tests (paper §3.1.2, §4.1, Listing 4.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import (QuantizerCfg, all_codes, codes,
+                                 dequantize_code, quantize)
+
+
+def test_hardtanh_is_binary():
+    """Listing 4.1: bit-width 1, max_val 1.61 -> values in {-1.61, +1.61}."""
+    cfg = QuantizerCfg(1, 1.61)
+    x = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    qt = quantize(cfg, x)
+    vals = np.unique(np.asarray(qt.value, dtype=np.float64))
+    assert len(vals) == 2
+    np.testing.assert_allclose(vals, [-1.61, 1.61], rtol=1e-6)
+    assert qt.bit_width == 1
+
+
+def test_quantrelu_levels():
+    """QuantReLU(b bits) emits integer levels 0..2^b-1 times the step."""
+    cfg = QuantizerCfg(3, 1.0)
+    x = jnp.linspace(-1.0, 2.0, 1001)
+    qt = quantize(cfg, x)
+    lv = np.asarray(qt.value) / cfg.step
+    assert np.allclose(lv, np.round(lv), atol=1e-5)
+    assert lv.min() >= 0 and lv.max() <= 7
+
+
+@given(bits=st.integers(1, 8), max_val=st.floats(0.25, 8.0),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=60, deadline=None)
+def test_code_roundtrip_exact(bits, max_val, seed):
+    """codes() -> dequantize_code() -> codes() is the identity."""
+    cfg = QuantizerCfg(bits, max_val)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * max_val
+    c = codes(cfg, x)
+    v = dequantize_code(cfg, c)
+    c2 = codes(cfg, v)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c2))
+    assert int(c.min()) >= 0 and int(c.max()) < cfg.n_levels
+
+
+@given(bits=st.integers(1, 6), max_val=st.floats(0.5, 4.0),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=40, deadline=None)
+def test_quantize_matches_codes(bits, max_val, seed):
+    """The fake-quant forward value equals the dequantized code — the
+    bridge that makes truth tables exact."""
+    cfg = QuantizerCfg(bits, max_val)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * max_val
+    qt = quantize(cfg, x)
+    v = dequantize_code(cfg, codes(cfg, x))
+    np.testing.assert_allclose(np.asarray(qt.value), np.asarray(v),
+                               rtol=0, atol=1e-6)
+
+
+def test_ste_gradient_passthrough():
+    """Gradient is 1 inside the clip range, 0 outside (STE)."""
+    cfg = QuantizerCfg(3, 1.0)
+    g = jax.grad(lambda x: quantize(cfg, x).value.sum())(
+        jnp.array([-0.5, 0.2, 0.7, 1.5]))
+    np.testing.assert_allclose(np.asarray(g), [0.0, 1.0, 1.0, 0.0])
+
+
+def test_all_codes():
+    assert list(np.asarray(all_codes(QuantizerCfg(2)))) == [0, 1, 2, 3]
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4])
+def test_quant_output_count(bits):
+    cfg = QuantizerCfg(bits, 1.0)
+    x = jnp.linspace(-2, 2, 4001)
+    distinct = np.unique(np.asarray(quantize(cfg, x).value))
+    assert len(distinct) <= 2 ** bits

@@ -1,0 +1,72 @@
+"""SparseConv (paper §4.4): depthwise-separable, sparse, quantized."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.layers import (SparseConvCfg, sparse_conv_apply,
+                               sparse_conv_init)
+from repro.core.lut_cost import sparse_conv_dw_cost, sparse_conv_pw_cost
+
+
+def test_forward_shapes_first_layer():
+    cfg = SparseConvCfg(in_channels=1, out_channels=8, kernel_size=3,
+                        stride=2, x_k=5, x_s=4, bw_in=2, bw_mid=2,
+                        first_layer=True)
+    layer = sparse_conv_init(cfg, jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, 28, 28, 1))
+    y, layer2 = sparse_conv_apply(cfg, layer, x, train=True)
+    assert y.shape == (4, 13, 13, 8)
+    assert bool(jnp.isfinite(y).all())
+    # first-layer rule: depthwise kernel count == out_channels (§4.4)
+    assert layer["params"]["w_dw"].shape[-1] == 8
+
+
+def test_forward_shapes_mid_layer():
+    cfg = SparseConvCfg(in_channels=6, out_channels=12, kernel_size=3,
+                        stride=1, x_k=4, x_s=3)
+    layer = sparse_conv_init(cfg, jax.random.PRNGKey(2))
+    x = jax.random.uniform(jax.random.PRNGKey(3), (2, 10, 10, 6))
+    y, _ = sparse_conv_apply(cfg, layer, x, train=True)
+    assert y.shape == (2, 8, 8, 12)
+
+
+def test_depthwise_matches_manual():
+    """The grouped conv equals an explicit per-channel correlation."""
+    from repro.core.layers import _depthwise
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (1, 6, 6, 3))
+    w = jax.random.normal(jax.random.PRNGKey(5), (3, 3, 3))
+    y = _depthwise(x, w, stride=1, replicate=False)
+    for c in range(3):
+        manual = jax.scipy.signal.correlate(
+            x[0, :, :, c], w[:, :, c], mode="valid")
+        np.testing.assert_allclose(np.asarray(y[0, :, :, c]),
+                                   np.asarray(manual), atol=1e-4)
+
+
+def test_mask_sparsity_counts():
+    cfg = SparseConvCfg(in_channels=6, out_channels=12, x_k=4, x_s=3)
+    layer = sparse_conv_init(cfg, jax.random.PRNGKey(6))
+    dw = np.asarray(layer["mask_dw"]).reshape(9, 6)
+    np.testing.assert_array_equal(dw.sum(axis=0), 4)    # x_k taps/kernel
+    pw = np.asarray(layer["mask_pw"])
+    np.testing.assert_array_equal(pw.sum(axis=0), 3)    # x_s inputs/neuron
+
+
+def test_conv_lut_costs_eq_4_3_4_4():
+    # eqs. 4.3/4.4 with LUTcost() the per-bit closed form
+    assert sparse_conv_dw_cost(out_pix=169, o_bits=2, n_ofm=16, x_k=5,
+                               i_bits=2) == 169 * 2 * 16 * 21
+    assert sparse_conv_pw_cost(out_pix=169, o_bits=2, n_ofm=16, x_s=5,
+                               i_bits=2) == 169 * 2 * 16 * 21
+
+
+def test_quantization_bounds_activations():
+    cfg = SparseConvCfg(in_channels=1, out_channels=4, bw_in=2,
+                        bw_mid=2, max_val_in=1.0, first_layer=True)
+    layer = sparse_conv_init(cfg, jax.random.PRNGKey(7))
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, 8, 8, 1)) * 10
+    y, _ = sparse_conv_apply(cfg, layer, x, train=False)
+    assert bool(jnp.isfinite(y).all())

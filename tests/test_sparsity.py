@@ -1,0 +1,98 @@
+"""Per-neuron fan-in sparsity invariants (paper §3.1.1, Algorithm 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsity as sp
+
+
+@given(seed=st.integers(0, 1000), in_f=st.integers(4, 64),
+       out_f=st.integers(1, 32), data=st.data())
+@settings(max_examples=50, deadline=None)
+def test_apriori_mask_exact_fan_in(seed, in_f, out_f, data):
+    fan_in = data.draw(st.integers(1, in_f))
+    m = np.asarray(sp.apriori_mask(seed, in_f, out_f, fan_in))
+    assert m.shape == (in_f, out_f)
+    np.testing.assert_array_equal(m.sum(axis=0), fan_in)
+    assert set(np.unique(m)) <= {0.0, 1.0}
+
+
+def test_apriori_mask_deterministic():
+    a = np.asarray(sp.apriori_mask(7, 32, 16, 4))
+    b = np.asarray(sp.apriori_mask(7, 32, 16, 4))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_mask_to_indices_roundtrip():
+    m = sp.apriori_mask(3, 16, 8, 5)
+    idx = sp.mask_to_indices(m)
+    assert idx.shape == (8, 5)
+    rebuilt = np.zeros((16, 8), np.float32)
+    for j in range(8):
+        rebuilt[idx[j], j] = 1.0
+    np.testing.assert_array_equal(rebuilt, np.asarray(m))
+
+
+@given(seed=st.integers(0, 500), frac=st.floats(0.0, 1.0))
+@settings(max_examples=40, deadline=None)
+def test_iterative_prune_monotone_and_bounded(seed, frac):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (32, 8))
+    mask = jnp.ones_like(w)
+    new = sp.iterative_prune_mask(w, mask, target_fan_in=4, frac=frac)
+    counts = np.asarray(new.sum(axis=0))
+    assert (counts >= 4).all() and (counts <= 32).all()
+    # full progress -> exactly the target fan-in
+    final = sp.iterative_prune_mask(w, mask, target_fan_in=4, frac=1.0)
+    np.testing.assert_array_equal(np.asarray(final.sum(axis=0)), 4)
+
+
+def test_iterative_prune_keeps_largest_magnitude():
+    w = jnp.array([[3.0, 0.1], [1.0, 2.0], [0.5, 0.3], [2.0, 5.0]])
+    new = sp.iterative_prune_mask(w, jnp.ones_like(w), 2, frac=1.0)
+    np.testing.assert_array_equal(
+        np.asarray(new), [[1, 0], [0, 1], [0, 0], [1, 1]])
+
+
+@given(seed=st.integers(0, 500), prune_rate=st.floats(0.05, 0.9))
+@settings(max_examples=40, deadline=None)
+def test_sparse_momentum_preserves_fan_in(seed, prune_rate):
+    """Algorithm 1: prune P1 + regrow R1 keeps fan-in F exactly."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    fan_in = 6
+    w = jax.random.normal(k1, (24, 10))
+    mom = jax.random.normal(k2, (24, 10))
+    mask = sp.apriori_mask(seed, 24, 10, fan_in)
+    new = sp.sparse_momentum_step(w * mask, mom, mask, fan_in, prune_rate)
+    np.testing.assert_array_equal(np.asarray(new.sum(axis=0)), fan_in)
+
+
+def test_sparse_momentum_regrows_by_momentum():
+    """The regrown weight is the inactive one with the largest |momentum|."""
+    in_f, out_f, fan_in = 6, 1, 2
+    mask = jnp.zeros((in_f, out_f)).at[0, 0].set(1.0).at[1, 0].set(1.0)
+    w = jnp.zeros((in_f, out_f)).at[0, 0].set(1.0).at[1, 0].set(0.01)
+    mom = jnp.zeros((in_f, out_f)).at[4, 0].set(9.0).at[5, 0].set(0.1)
+    new = np.asarray(sp.sparse_momentum_step(w, mom, mask, fan_in, 0.5))
+    assert new[0, 0] == 1.0   # largest |w| kept
+    assert new[4, 0] == 1.0   # largest |momentum| regrown
+    assert new.sum() == fan_in
+
+
+def test_momentum_ema():
+    m = sp.momentum_ema(jnp.array(1.0), jnp.array(0.0), alpha=0.9)
+    np.testing.assert_allclose(float(m), 0.9)
+
+
+def test_erdos_renyi_larger_layers_sparser():
+    s = sp.erdos_renyi_sparsity([(64, 64), (1024, 1024)])
+    assert s[1] > s[0]
+    assert all(0.0 <= v <= 1.0 for v in s)
+
+
+def test_fan_in_from_sparsity():
+    assert sp.fan_in_from_sparsity(100, 0.95) == 5
+    assert sp.fan_in_from_sparsity(100, 0.999) == 1  # floor at minimum
