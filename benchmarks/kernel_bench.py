@@ -4,10 +4,21 @@ On this CPU container the Pallas numbers are *interpreter* timings
 (functional only — the TPU target compiles natively); the jnp-ref rows are
 the meaningful CPU timings.  Both are reported so the harness shape is
 complete.
+
+Also a CLI (used by the CI bench-smoke step)::
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench --json BENCH_kernel.json
+    PYTHONPATH=src python -m benchmarks.kernel_bench --smoke --json out.json
+
+``--smoke`` restricts to the fused-vs-per-layer LUT-network comparison on
+the fpga4hep topologies at reduced iteration counts, emitting the
+``fused_speedup`` field the perf trajectory tracks.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -15,6 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
+from repro.kernels.lut_lookup import lut_lookup_pallas
+from repro.kernels.lut_network import build_network_slabs, lut_network_pallas
 from repro.kernels.ops import flash_attention, lut_lookup, masked_matmul
 
 Row = tuple[str, float, str]
@@ -71,3 +84,116 @@ def kernel_rows() -> list[Row]:
     rows.append(("kernel/flash_attention_ref_jnp", _bench(jref, q, iters=5),
                  f"S={s} Hq={hq} GQA"))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Fused whole-network LUT engine vs the per-layer path
+# ---------------------------------------------------------------------------
+
+def _random_stack(widths, fan_in, bw, seed=0):
+    rng = np.random.default_rng(seed)
+    layers = []
+    for n_in, n_out in zip(widths[:-1], widths[1:]):
+        fi = min(fan_in, n_in)
+        idx = np.stack([np.sort(rng.choice(n_in, fi, replace=False))
+                        for _ in range(n_out)]).astype(np.int32)
+        tab = rng.integers(0, 2 ** bw, (n_out, 2 ** (fi * bw)),
+                           dtype=np.int32)
+        layers.append((idx, tab, bw))
+    return layers
+
+# Sparse stacks of the paper's own topologies (fpga4hep Table 6.1): the
+# fused engine's headline comparison runs on model A's 3-layer stack.
+LUT_NETWORK_CASES = {
+    # name: (widths, fan_in, bw, batch)
+    "fpga4hep_modelA": ((16, 64, 64, 64), 3, 3, 128),
+    "jsc_deep": ((16, 64, 64, 64, 64), 3, 2, 128),
+}
+
+
+def lut_network_rows(smoke: bool = False) -> tuple[list[Row], dict]:
+    """Per-layer vs fused whole-network inference on LogicNet stacks.
+
+    Returns (rows, extras); ``extras['fused_speedup']`` is the headline
+    per-layer/fused ratio on the fpga4hep model A stack — the number the
+    BENCH artifacts track.  Both paths run through Pallas (interpret mode
+    off-TPU), jitted, so timings compare execution not tracing.
+    """
+    iters, warmup = (5, 2) if smoke else (20, 3)
+    rows: list[Row] = []
+    extras: dict = {"cases": {}}
+    for name, (widths, fan_in, bw, batch) in LUT_NETWORK_CASES.items():
+        layers = _random_stack(widths, fan_in, bw, seed=len(name))
+        slabs = build_network_slabs(layers)
+        jl = [(jnp.asarray(i), jnp.asarray(t), b) for i, t, b in layers]
+        codes = jnp.asarray(np.random.default_rng(0).integers(
+            0, 2 ** bw, (batch, widths[0]), dtype=np.int32))
+        interp = jax.default_backend() != "tpu"
+
+        fused = jax.jit(
+            lambda c, s=slabs: lut_network_pallas(c, s, interpret=interp))
+
+        def per_layer(c, jl=jl):
+            for i, t, b in jl:
+                c = lut_lookup_pallas(c, i, t, b, interpret=interp)
+            return c
+        per = jax.jit(per_layer)
+
+        np.testing.assert_array_equal(np.asarray(fused(codes)),
+                                      np.asarray(per(codes)))
+        us_per = _bench(per, codes, iters=iters, warmup=warmup)
+        us_fused = _bench(fused, codes, iters=iters, warmup=warmup)
+        speedup = us_per / us_fused
+        n_layers = len(layers)
+        rows.append((f"kernel/lut_network_perlayer[{name}]", us_per,
+                     f"batch={batch} layers={n_layers}"))
+        rows.append((f"kernel/lut_network_fused[{name}]", us_fused,
+                     f"speedup={speedup:.2f}x vs per-layer"))
+        extras["cases"][name] = {
+            "layers": n_layers, "batch": batch, "bw": bw, "fan_in": fan_in,
+            "us_per_layer_path": us_per, "us_fused": us_fused,
+            "fused_speedup": speedup,
+            "slab_bytes": slabs.vmem_bytes(), "packed": slabs.packed,
+        }
+        if name == "fpga4hep_modelA":
+            extras["fused_speedup"] = speedup
+    return rows, extras
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, help="write results to this path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fused-vs-per-layer comparison only, few iters")
+    args = ap.parse_args()
+
+    if args.json:  # fail fast on an unwritable path, not after the bench
+        with open(args.json, "a"):
+            pass
+
+    rows: list[Row] = [] if args.smoke else kernel_rows()
+    net_rows, extras = lut_network_rows(smoke=args.smoke)
+    rows += net_rows
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    print(f"# fused_speedup={extras.get('fused_speedup', float('nan')):.2f}x "
+          f"(fpga4hep model A, {'smoke' if args.smoke else 'full'})")
+
+    if args.json:
+        payload = {
+            "benchmark": "kernel_bench",
+            "mode": "smoke" if args.smoke else "full",
+            "backend": jax.default_backend(),
+            "rows": [{"name": n, "us_per_call": us, "derived": d}
+                     for n, us, d in rows],
+            **extras,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,6 @@ regenerated)."""
 
 from __future__ import annotations
 
-import json
 import re
 
 from benchmarks import perf_report, roofline
@@ -254,7 +253,8 @@ def perf_log() -> str:
                     f"* measured `{r['variant']}`: baseline-dominant "
                     f"({dom}) {delta:+.1f}%, peak "
                     f"{peak_b:.1f}→{peak_v:.1f} GiB/chip, roofline frac "
-                    f"x{r['roofline_fraction'] / max(base['roofline_fraction'], 1e-12):.2f} -> {verdict}")
+                    f"x{r['roofline_fraction'] / max(base['roofline_fraction'], 1e-12):.2f}"
+                    f" -> {verdict}")
         out.append("")
     return "\n".join(out)
 

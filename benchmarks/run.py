@@ -26,6 +26,7 @@ def main() -> None:
     rows = []
     rows += paper_tables.all_tables(quick=args.quick)
     rows += kernel_bench.kernel_rows()
+    rows += kernel_bench.lut_network_rows(smoke=args.quick)[0]
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

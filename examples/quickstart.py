@@ -26,12 +26,14 @@ def main() -> None:
                          method="apriori", steps=300)
     print(f"test accuracy: {res.accuracy:.3f}")
 
-    # 3. Convert NEQs -> truth tables; functional verification.
+    # 3. Convert NEQs -> truth tables; functional verification.  The table
+    # path runs through the fused whole-network Pallas engine (one kernel
+    # for the entire sparse stack — the TPU shape of the FPGA pipeline).
     tables = LN.generate_tables(cfg, res.model)
     f_codes, t_codes = LN.verify_tables(cfg, res.model, tables,
-                                        x[3500:3600])
+                                        x[3500:3600], fused=True)
     exact = bool((np.asarray(f_codes) == np.asarray(t_codes)).all())
-    print(f"truth-table functional verification: "
+    print(f"truth-table functional verification (fused kernel): "
           f"{'EXACT MATCH' if exact else 'MISMATCH'}")
     assert exact
 

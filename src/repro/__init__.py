@@ -1,0 +1,3 @@
+"""JAX/Pallas reproduction of 'Exposing Hardware Building Blocks to
+Machine Learning Frameworks' — LogicNets as hardware building blocks on
+TPU (see ROADMAP.md for the quickstart)."""

@@ -167,16 +167,18 @@ def generate_tables(cfg: LogicNetCfg, model: list[dict]
 
 
 def verify_tables(cfg: LogicNetCfg, model: list[dict],
-                  tables: list[TT.LayerTruthTable], x: jax.Array
-                  ) -> tuple[jax.Array, jax.Array]:
+                  tables: list[TT.LayerTruthTable], x: jax.Array,
+                  fused: bool = False) -> tuple[jax.Array, jax.Array]:
     """Functional verification: float path vs table path on the sparse stack.
 
     Returns (codes_float_path, codes_table_path); the contract is exact
-    equality.
+    equality.  ``fused`` runs the table path through the whole-network
+    Pallas kernel instead of the per-layer jnp reference.
     """
     cfgs = cfg.layer_cfgs()
     in_codes = codes(cfgs[0].in_quant, x)
-    table_out = table_infer.network_table_forward(tables, in_codes)
+    table_out = table_infer.network_table_forward(tables, in_codes,
+                                                  fused=fused)
 
     h = x
     layer = None
@@ -191,13 +193,15 @@ def verify_tables(cfg: LogicNetCfg, model: list[dict],
 
 def sparse_head_forward(cfg: LogicNetCfg, model: list[dict],
                         tables: list[TT.LayerTruthTable],
-                        x: jax.Array) -> jax.Array:
+                        x: jax.Array, fused: bool = False) -> jax.Array:
     """Deployment-style forward: sparse stack via tables, then the dense
-    final layer (if any) in arithmetic."""
+    final layer (if any) in arithmetic.  ``fused`` executes the sparse
+    stack as one whole-network Pallas kernel (the FPGA-pipeline path)."""
     cfgs = cfg.layer_cfgs()
     c0 = cfgs[0]
     in_codes = codes(c0.in_quant, x)
-    out_codes = table_infer.network_table_forward(tables, in_codes)
+    out_codes = table_infer.network_table_forward(tables, in_codes,
+                                                  fused=fused)
     if len(tables) == len(cfgs):
         return out_codes
     cfin = cfgs[-1]

@@ -37,8 +37,22 @@ def layer_table_forward(tt: LayerTruthTable, codes: jax.Array) -> jax.Array:
 
 
 def network_table_forward(tables: list[LayerTruthTable],
-                          in_codes: jax.Array) -> jax.Array:
-    """Full sparse-stack forward on integer codes."""
+                          in_codes: jax.Array,
+                          fused: bool = False) -> jax.Array:
+    """Full sparse-stack forward on integer codes.
+
+    ``fused=True`` routes through the whole-network Pallas kernel
+    (``kernels.ops.lut_network``): one kernel launch for the entire stack,
+    activation codes held in VMEM between layers, with automatic fallback
+    to per-layer execution when the fused slabs would overflow VMEM.  Both
+    paths are bit-exact with this function's plain-jnp semantics — that
+    equality is the kernel's verification contract.
+    """
+    if fused:
+        from repro.kernels.ops import lut_network
+        return lut_network(in_codes,
+                           [(tt.indices, tt.table, tt.bw_in)
+                            for tt in tables], fused=True)
     c = in_codes
     for tt in tables:
         c = layer_table_forward(tt, c)

@@ -19,7 +19,6 @@ import dataclasses
 
 import numpy as np
 
-import jax
 
 
 @dataclasses.dataclass

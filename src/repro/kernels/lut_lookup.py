@@ -26,16 +26,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(codes_ref, idx_ref, table_ref, out_ref, *, bw_in: int,
-            e_chunk: int):
-    codes = codes_ref[...]                      # (bb, I) int32
-    idx = idx_ref[...]                          # (bo, FI) int32
-    table = table_ref[...]                      # (bo, E) int32
+def pack_fan_in_entries(codes: jax.Array, idx: jax.Array,
+                        bw_in: int) -> jax.Array:
+    """(bb, I) codes + (bo, FI) indices -> (bo, bb) packed table entries.
+
+    Fan-in gather as a one-hot contraction (MXU), then shift-pack each
+    neuron's gathered codes into its table index.  Shared by this
+    per-layer kernel and the fused whole-network kernel (lut_network).
+    """
     bb, n_in = codes.shape
     bo, fan_in = idx.shape
-    n_entries = table.shape[1]
-
-    # --- fan-in gather as one-hot contraction (MXU) -----------------------
     iota_i = jax.lax.broadcasted_iota(jnp.int32, (n_in, 1), 0)[:, 0]
     sel = (idx[:, :, None] == iota_i[None, None, :]).astype(jnp.float32)
     # (bo*FI, I) @ (I, bb) -> (bo*FI, bb)
@@ -43,10 +43,20 @@ def _kernel(codes_ref, idx_ref, table_ref, out_ref, *, bw_in: int,
                     codes.astype(jnp.float32).T,
                     preferred_element_type=jnp.float32)
     g = g.reshape(bo, fan_in, bb).astype(jnp.int32)
-
-    # --- pack fan-in codes into table indices -----------------------------
     shifts = bw_in * jax.lax.broadcasted_iota(jnp.int32, (fan_in, 1), 0)[:, 0]
-    entry = jnp.sum(g << shifts[None, :, None], axis=1)   # (bo, bb)
+    return jnp.sum(g << shifts[None, :, None], axis=1)    # (bo, bb)
+
+
+def _kernel(codes_ref, idx_ref, table_ref, out_ref, *, bw_in: int,
+            e_chunk: int):
+    codes = codes_ref[...]                      # (bb, I) int32
+    idx = idx_ref[...]                          # (bo, FI) int32
+    table = table_ref[...]                      # (bo, E) int32
+    bb = codes.shape[0]
+    bo = idx.shape[0]
+    n_entries = table.shape[1]
+
+    entry = pack_fan_in_entries(codes, idx, bw_in)        # (bo, bb)
 
     # --- table gather, streamed over entry chunks -------------------------
     n_chunks = pl.cdiv(n_entries, e_chunk)

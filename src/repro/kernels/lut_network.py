@@ -1,0 +1,228 @@
+"""Pallas TPU kernel: fused whole-network LogicNets LUT inference.
+
+The paper's deployment claim is that an extreme-throughput LogicNet *is* a
+pipeline of LUTs: on the FPGA every layer's truth tables live in fabric and
+an activation never leaves the chip between layers — that "no off-chip
+round-trip" discipline is what buys sub-microsecond whole-network latency.
+The per-layer ``lut_lookup`` kernel violates the analogy on TPU: each layer
+is its own ``pallas_call``, so int32 activation codes bounce through HBM
+between every pair of layers.
+
+This kernel is the TPU transliteration of the FPGA pipeline.  All layers'
+truth tables and fan-in indices are concatenated into two VMEM-resident
+slabs (padded to the widest layer, with *static* per-layer shape metadata
+compiled into the kernel), the grid runs over batch tiles only, and the
+activation codes stay in registers/VMEM from network input to network
+output — one ``pallas_call`` for the whole sparse stack, exactly as the
+fabric holds the whole net.
+
+Layout:
+
+  * ``idx_slab``   (L, O_max, FI_max) int32 — layer l's fan-in indices in
+    ``[l, :O_l, :FI_l]``; padding is zero and never read (static slices).
+  * ``table_slab`` (L, O_max, E_max) int32, or int8 when every layer's
+    output codes fit a byte (``bw_out <= 8``).  Packed tables are widened
+    in-kernel with a mask, quartering the VMEM footprint so deeper stacks
+    stay under the budget that ``ops.lut_network`` enforces.
+
+Per layer the fan-in gather is the same one-hot MXU contraction as
+``lut_lookup``, but the table gather is upgraded from a streamed
+compare/select to a *two-level one-hot gather* (see ``_layer_step``): the
+bulk of the work becomes a batched matmul, which is where the fused
+engine's measured speedup over the per-layer path comes from on top of
+the saved HBM round trips.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.lut_lookup import pack_fan_in_entries
+
+
+class LayerMeta(NamedTuple):
+    """Static per-layer shape metadata (compiled into the kernel)."""
+
+    n_out: int
+    fan_in: int
+    n_entries: int
+    bw_in: int
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkSlabs:
+    """A whole sparse stack packed for single-kernel execution."""
+
+    idx_slab: jax.Array      # (L, O_max, FI_max) int32
+    table_slab: jax.Array    # (L, O_max, E_max) int32 | int8 (packed)
+    meta: tuple[LayerMeta, ...]
+    packed: bool
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.meta)
+
+    @property
+    def n_out(self) -> int:
+        return self.meta[-1].n_out
+
+    def vmem_bytes(self) -> int:
+        return (self.idx_slab.size * self.idx_slab.dtype.itemsize
+                + self.table_slab.size * self.table_slab.dtype.itemsize)
+
+
+def estimate_slab_bytes(layers: Sequence[tuple]) -> tuple[int, bool, bool]:
+    """Projected fused-slab footprint, int8-pack and f32-exact eligibility.
+
+    Computed from shapes plus one pass of min/max over the tables (no
+    copies) — lets ``ops.lut_network`` decide *before* paying for slab
+    construction it would discard on the per-layer fallback path.  Returns
+    ``(bytes, pack, f32_exact)``; ``f32_exact`` is False when any output
+    code is outside [0, 2^24), where the kernel's f32 one-hot gather
+    would round.
+    """
+    n_l = len(layers)
+    o_max = max(np.asarray(t).shape[0] for _, t, _ in layers)
+    fi_max = max(np.asarray(i).shape[1] for i, _, _ in layers)
+    e_max = max(np.asarray(t).shape[1] for _, t, _ in layers)
+    lo_hi = [(int(np.min(t, initial=0)), int(np.max(t, initial=0)))
+             for _, t, _ in layers]
+    pack = all(lo >= 0 and hi < 256 for lo, hi in lo_hi)
+    f32_exact = all(lo >= 0 and hi < 1 << 24 for lo, hi in lo_hi)
+    table_itemsize = 1 if pack else 4
+    return (n_l * o_max * fi_max * 4
+            + n_l * o_max * e_max * table_itemsize), pack, f32_exact
+
+
+def build_network_slabs(layers: Sequence[tuple], *,
+                        pack: bool | None = None) -> NetworkSlabs:
+    """Pack per-layer ``(indices, table, bw_in)`` triples into fused slabs.
+
+    ``pack=None`` (auto) stores the table slab as int8 whenever every
+    layer's output codes fit an unsigned byte — true for any LogicNets
+    topology with ``bw_out <= 8``.  Host-side (numpy): tables come straight
+    from ``LayerTruthTable`` generation.
+    """
+    if not layers:
+        raise ValueError("fused network needs at least one layer")
+    metas = []
+    idx_np, tab_np = [], []
+    for indices, table, bw_in in layers:
+        idx = np.asarray(indices, dtype=np.int32)
+        tab = np.asarray(table, dtype=np.int32)
+        m = LayerMeta(tab.shape[0], idx.shape[1], tab.shape[1], int(bw_in))
+        if m.n_entries != 1 << (m.fan_in * m.bw_in):
+            raise ValueError(
+                f"table has {m.n_entries} entries; fan_in={m.fan_in} at "
+                f"bw_in={m.bw_in} requires 2^{m.fan_in * m.bw_in}")
+        if int(tab.max(initial=0)) >= 1 << 24 or int(tab.min(initial=0)) < 0:
+            raise ValueError(
+                "fused kernel gathers tables through exact f32 one-hot "
+                "contractions; output codes must be in [0, 2^24) — use the "
+                "per-layer path (fused=False) for wider codes")
+        metas.append(m)
+        idx_np.append(idx)
+        tab_np.append(tab)
+    n_l = len(metas)
+    o_max = max(m.n_out for m in metas)
+    fi_max = max(m.fan_in for m in metas)
+    e_max = max(m.n_entries for m in metas)
+
+    idx_slab = np.zeros((n_l, o_max, fi_max), dtype=np.int32)
+    if pack is None:
+        pack = all(int(t.max(initial=0)) < 256 and int(t.min(initial=0)) >= 0
+                   for t in tab_np)
+    tab_dtype = np.int8 if pack else np.int32
+    table_slab = np.zeros((n_l, o_max, e_max), dtype=tab_dtype)
+    for l, (idx, tab, m) in enumerate(zip(idx_np, tab_np, metas)):
+        idx_slab[l, :m.n_out, :m.fan_in] = idx
+        table_slab[l, :m.n_out, :m.n_entries] = (
+            tab.astype(np.uint8).view(np.int8) if pack else tab)
+    return NetworkSlabs(jnp.asarray(idx_slab), jnp.asarray(table_slab),
+                        tuple(metas), bool(pack))
+
+
+def _layer_step(h: jax.Array, idx: jax.Array, table: jax.Array,
+                bw_in: int) -> jax.Array:
+    """One LUT layer on in-register codes: (bb, I) -> (bb, O).
+
+    Unlike the per-layer ``lut_lookup`` kernel (which streams an
+    elementwise compare/select over all table entries), the table gather
+    here splits the packed entry index into low/high halves: the low half
+    is gathered with one *batched matmul* against its one-hot (MXU work),
+    which collapses the entry axis from E to sqrt(E); the high half then
+    costs only an O(B*O*sqrt(E)) elementwise select.  Same exact result —
+    one-hot contractions on small ints are exact in f32 — at matmul
+    throughput instead of compare/select throughput.
+    """
+    bo, fan_in = idx.shape
+    n_entries = table.shape[1]
+
+    entry = pack_fan_in_entries(h, idx, bw_in)               # (bo, bb)
+
+    # two-level one-hot gather: entry = hi * n_lo + lo
+    ent_bits = fan_in * bw_in
+    lo_bits = ent_bits // 2
+    n_lo = 1 << lo_bits
+    n_hi = n_entries // n_lo
+    lo = entry & (n_lo - 1)
+    hi = entry >> lo_bits
+
+    lo_iota = jax.lax.broadcasted_iota(jnp.int32, (1, n_lo), 1)[0]
+    oh_lo = (lo[:, :, None] == lo_iota[None, None, :]).astype(jnp.float32)
+    # (bo, n_hi, n_lo) x (bo, bb, n_lo) -> (bo, n_hi, bb), batched over bo
+    part = jax.lax.dot_general(
+        table.astype(jnp.float32).reshape(bo, n_hi, n_lo), oh_lo,
+        (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32)
+
+    hi_iota = jax.lax.broadcasted_iota(jnp.int32, (1, n_hi), 1)[0]
+    oh_hi = (hi[:, :, None] == hi_iota[None, None, :])       # (bo, bb, n_hi)
+    out = jnp.sum(jnp.where(jnp.transpose(oh_hi, (0, 2, 1)), part, 0.0),
+                  axis=1)                                    # (bo, bb)
+    return out.astype(jnp.int32).T                           # (bb, bo)
+
+
+def _kernel(codes_ref, idx_ref, table_ref, out_ref, *,
+            meta: tuple[LayerMeta, ...], packed: bool):
+    h = codes_ref[...]                                       # (bb, I0)
+    # Static unroll: each layer reads its (unpadded) slice of the slabs and
+    # hands its output codes straight to the next layer — no HBM in between.
+    for l, m in enumerate(meta):
+        idx = idx_ref[l, :m.n_out, :m.fan_in]
+        table = table_ref[l, :m.n_out, :m.n_entries]
+        if packed:
+            table = table.astype(jnp.int32) & 0xFF
+        h = _layer_step(h, idx, table, m.bw_in)
+    out_ref[...] = h
+
+
+def lut_network_pallas(codes: jax.Array, slabs: NetworkSlabs, *,
+                       block_b: int = 128,
+                       interpret: bool = False) -> jax.Array:
+    """Whole sparse stack in one kernel: (batch, I0) -> (batch, O_last)."""
+    batch, n_in = codes.shape
+    n_l, o_max, fi_max = slabs.idx_slab.shape
+    e_max = slabs.table_slab.shape[2]
+    block_b = min(block_b, batch)
+    grid = (pl.cdiv(batch, block_b),)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, meta=slabs.meta, packed=slabs.packed),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n_in), lambda b: (b, 0)),
+            pl.BlockSpec((n_l, o_max, fi_max), lambda b: (0, 0, 0)),
+            pl.BlockSpec((n_l, o_max, e_max), lambda b: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, slabs.n_out), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, slabs.n_out), jnp.int32),
+        interpret=interpret,
+    )(codes, slabs.idx_slab, slabs.table_slab)

@@ -16,7 +16,16 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.lut_lookup import lut_lookup_pallas
+from repro.kernels.lut_network import (build_network_slabs,
+                                       estimate_slab_bytes,
+                                       lut_network_pallas)
 from repro.kernels.masked_matmul import masked_matmul_pallas
+
+# Fused-network slab budget: the whole stack's tables + indices must sit in
+# VMEM alongside a batch tile of codes and the per-layer scratch.  ~16 MB
+# per core; keep the slabs under half of it and leave the rest to the
+# compiler (same conservatism as the lut_lookup tile sizing).
+FUSED_VMEM_BUDGET_BYTES = 8 * 2 ** 20
 
 
 def _on_tpu() -> bool:
@@ -31,6 +40,45 @@ def lut_lookup(codes: jax.Array, indices: jax.Array, table: jax.Array,
         return ref.lut_lookup_ref(codes, indices, table, bw_in)
     return lut_lookup_pallas(codes, indices, table, bw_in,
                              interpret=not _on_tpu())
+
+
+def lut_network(codes: jax.Array, layers, *, fused: bool = True,
+                use_pallas: bool = True, block_b: int = 128,
+                vmem_budget_bytes: int = FUSED_VMEM_BUDGET_BYTES
+                ) -> jax.Array:
+    """Whole sparse-stack LUT inference: (B, I0) codes -> (B, O_last) codes.
+
+    ``layers`` is a sequence of ``(indices, table, bw_in)`` triples, one per
+    sparse layer (exactly ``LayerTruthTable``'s fields).  With ``fused``
+    the stack runs as a single ``pallas_call`` (activations never leave
+    VMEM) when the concatenated slabs fit ``vmem_budget_bytes``; otherwise
+    — and always when ``fused=False`` — it falls back to one
+    ``lut_lookup`` call per layer.  Both paths are bit-exact with the
+    ``table_infer.network_table_forward`` reference semantics.
+
+    Slabs are rebuilt (host-side numpy) and the kernel re-traced on every
+    call — fine for verification and batch scoring; a throughput serving
+    loop should instead ``build_network_slabs`` once and jit a closure
+    over ``lut_network_pallas`` (see benchmarks/kernel_bench.py).
+    """
+    if not use_pallas:
+        c = codes
+        for indices, table, bw_in in layers:
+            c = ref.lut_lookup_ref(c, jnp.asarray(indices),
+                                   jnp.asarray(table), int(bw_in))
+        return c
+    if fused:
+        est_bytes, pack, f32_exact = estimate_slab_bytes(layers)
+        if f32_exact and est_bytes <= vmem_budget_bytes:
+            slabs = build_network_slabs(layers, pack=pack)
+            return lut_network_pallas(codes, slabs, block_b=block_b,
+                                      interpret=not _on_tpu())
+    c = codes
+    for indices, table, bw_in in layers:
+        c = lut_lookup_pallas(c, jnp.asarray(indices), jnp.asarray(table),
+                              int(bw_in), block_b=block_b,
+                              interpret=not _on_tpu())
+    return c
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

@@ -35,7 +35,6 @@ from repro.configs import ARCH_IDS, SHAPES, cell_skip, get_config
 from repro.launch import steps as S
 from repro.launch.hlo_stats import collective_bytes
 from repro.launch.mesh import make_production_mesh
-from repro.models.config import MoECfg
 from repro.parallel import sharding as SH
 from repro.parallel.ctx import activation_sharding
 

@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.config import LogicNetFFNCfg, ModelCfg
+from repro.models.config import LogicNetFFNCfg
 
 
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:

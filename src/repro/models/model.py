@@ -7,7 +7,6 @@ stays compact for the 512-device dry-run; hybrids scan super-layers
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

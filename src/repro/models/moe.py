@@ -19,7 +19,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelCfg
-from repro.models.layers import ffn_init
 
 
 def moe_init(key: jax.Array, cfg: ModelCfg, dtype) -> dict:

@@ -30,7 +30,6 @@ import logging
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager

@@ -1,0 +1,34 @@
+"""Import shim: real hypothesis when installed, skip-marking stubs otherwise.
+
+CI installs the ``test`` extra (which includes hypothesis) and runs the
+property tests for real.  In a bare environment the stubs below let the
+modules still *collect*, marking only the property-based cases as skipped —
+the plain unit tests in the same files keep running.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (pip install -e .[test])",
+            )(fn)
+        return deco
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    class _Strategies:
+        """Strategy calls only happen at decoration time; return None."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

@@ -6,10 +6,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# Each per-arch case is a 5-25 s real forward/train step; CI runs -m "not slow".
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.launch.steps import (input_specs, make_decode_step,
-                                make_prefill_step, make_train_state,
-                                make_train_step)
+                                make_train_state, make_train_step)
 from repro.models import model as M
 
 

@@ -1,7 +1,7 @@
 """Analytical LUT cost model vs the paper's own numbers (Tables 2.1, 6.1)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # real when installed
 
 from repro.core import lut_cost as lc
 from repro.core.logicnet import LogicNetCfg

@@ -1,0 +1,188 @@
+"""Fused whole-network LUT kernel vs the per-layer reference semantics.
+
+``table_infer.network_table_forward`` names itself the kernel's reference
+semantics; the contract here is bit-exactness against it across topology
+shapes, bit-widths, the int8-packed vs unpacked table paths, and the
+VMEM-overflow fallback to per-layer execution.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st  # real when installed
+
+from repro.core.table_infer import network_table_forward
+from repro.core.truth_table import LayerTruthTable
+from repro.kernels import ref
+from repro.kernels.ops import lut_network
+from repro.kernels.lut_network import (build_network_slabs,
+                                       lut_network_pallas)
+
+
+def _random_stack(widths, fan_ins, bws, seed=0):
+    """(indices, table, bw_in) triples for a stack of random LUT layers."""
+    rng = np.random.default_rng(seed)
+    layers = []
+    for (n_in, n_out), fi, bw in zip(zip(widths[:-1], widths[1:]),
+                                     fan_ins, bws):
+        fi = min(fi, n_in)
+        idx = np.stack([np.sort(rng.choice(n_in, fi, replace=False))
+                        for _ in range(n_out)]).astype(np.int32)
+        tab = rng.integers(0, 2 ** bw, (n_out, 2 ** (fi * bw)),
+                           dtype=np.int32)
+        layers.append((idx, tab, bw))
+    return layers
+
+
+def _ref_forward(codes, layers):
+    c = codes
+    for idx, tab, bw in layers:
+        c = ref.lut_lookup_ref(c, jnp.asarray(idx), jnp.asarray(tab), bw)
+    return c
+
+
+def _tables(layers):
+    return [LayerTruthTable(tab, idx, bw, bw) for idx, tab, bw in layers]
+
+
+@pytest.mark.parametrize("widths,fan_ins,bws,batch", [
+    ((8, 8, 8), (2, 2), (1, 1), 4),             # minimal 2-layer binary
+    ((16, 64, 64, 64), (3, 3, 3), (2, 2, 2), 37),   # model-A-like, ragged B
+    ((16, 64, 32, 32, 5), (3, 4, 4, 5), (2, 2, 2, 2), 64),  # 4-layer, het FI
+    ((12, 24, 10), (6, 3), (2, 2), 17),         # 12-bit tables, e-chunks
+    ((16, 32, 16), (2, 2), (3, 3), 150),        # multi-block batch, bw 3
+])
+def test_fused_matches_network_table_forward(widths, fan_ins, bws, batch):
+    layers = _random_stack(widths, fan_ins, bws, seed=sum(widths))
+    codes = jnp.asarray(np.random.default_rng(batch).integers(
+        0, 2 ** bws[0], (batch, widths[0]), dtype=np.int32))
+    want = network_table_forward(_tables(layers), codes)
+    got = lut_network_pallas(codes, build_network_slabs(layers),
+                             block_b=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_packed_and_unpacked_paths_agree():
+    layers = _random_stack((16, 48, 48, 24), (3, 3, 3), (2, 2, 2), seed=5)
+    codes = jnp.asarray(np.random.default_rng(1).integers(
+        0, 4, (40, 16), dtype=np.int32))
+    want = _ref_forward(codes, layers)
+
+    packed = build_network_slabs(layers, pack=True)
+    unpacked = build_network_slabs(layers, pack=False)
+    assert packed.packed and packed.table_slab.dtype == jnp.int8
+    assert not unpacked.packed and unpacked.table_slab.dtype == jnp.int32
+    # int8 packing quarters the table slab footprint
+    assert packed.vmem_bytes() < unpacked.vmem_bytes()
+
+    for slabs in (packed, unpacked):
+        got = lut_network_pallas(codes, slabs, block_b=16, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_auto_pack_declines_wide_codes():
+    """Tables holding codes >= 256 must not be byte-packed."""
+    layers = _random_stack((8, 8, 8), (2, 2), (2, 2), seed=2)
+    idx, tab, bw = layers[-1]
+    layers[-1] = (idx, tab + 300, bw)           # out codes exceed a byte
+    slabs = build_network_slabs(layers)
+    assert not slabs.packed
+    codes = jnp.asarray(np.random.default_rng(0).integers(
+        0, 4, (9, 8), dtype=np.int32))
+    got = lut_network_pallas(codes, slabs, block_b=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(_ref_forward(codes, layers)))
+
+
+def test_wide_codes_rejected_by_builder_and_fall_back_in_ops():
+    """Output codes >= 2^24 would round in the kernel's f32 one-hot gather:
+    build_network_slabs must refuse them, and ops.lut_network must route
+    to the (integer, exact) per-layer path instead."""
+    layers = _random_stack((8, 8), (2,), (2,), seed=11)
+    idx, tab, bw = layers[0]
+    layers[0] = (idx, tab + (1 << 24), bw)
+    with pytest.raises(ValueError, match="f32"):
+        build_network_slabs(layers)
+    codes = jnp.asarray(np.random.default_rng(4).integers(
+        0, 4, (6, 8), dtype=np.int32))
+    got = lut_network(codes, layers)            # silent per-layer fallback
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(_ref_forward(codes, layers)))
+
+
+def test_vmem_overflow_falls_back_to_per_layer():
+    """A tiny budget must route through per-layer lut_lookup, bit-exactly."""
+    layers = _random_stack((16, 32, 32, 16), (3, 3, 3), (2, 2, 2), seed=3)
+    codes = jnp.asarray(np.random.default_rng(2).integers(
+        0, 4, (21, 16), dtype=np.int32))
+    want = _ref_forward(codes, layers)
+    slabs = build_network_slabs(layers)
+    assert slabs.vmem_bytes() > 64          # budget below any real slab
+    got = lut_network(codes, layers, vmem_budget_bytes=64)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    got = lut_network(codes, layers, fused=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_path_through_core_api():
+    """network_table_forward(fused=True) == its own jnp semantics."""
+    layers = _random_stack((16, 24, 24, 12), (3, 3, 3), (2, 2, 2), seed=7)
+    tables = _tables(layers)
+    codes = jnp.asarray(np.random.default_rng(3).integers(
+        0, 4, (33, 16), dtype=np.int32))
+    want = network_table_forward(tables, codes)
+    got = network_table_forward(tables, codes, fused=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_matches_generated_tables():
+    """End-to-end on real generated truth tables (fpga4hep model C shape)."""
+    from repro.configs import fpga4hep
+    from repro.core import logicnet as LN
+
+    cfg = fpga4hep.model_c()
+    model = LN.init(cfg, jax.random.PRNGKey(0))
+    tables = LN.generate_tables(cfg, model)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (48, cfg.in_features),
+                           minval=-1, maxval=3)
+    float_codes, fused_codes = LN.verify_tables(cfg, model, tables, x,
+                                                fused=True)
+    np.testing.assert_array_equal(np.asarray(float_codes),
+                                  np.asarray(fused_codes))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-driven sweep (skipped when hypothesis isn't installed)
+# ---------------------------------------------------------------------------
+
+
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_fused_bit_exact_hypothesis(data):
+    n_layers = data.draw(st.integers(2, 4), label="n_layers")
+    widths = [data.draw(st.integers(4, 24), label=f"w{i}")
+              for i in range(n_layers + 1)]
+    bws = [data.draw(st.integers(1, 3), label=f"bw{i}")
+           for i in range(n_layers)]
+    fan_ins = []
+    for i in range(n_layers):
+        max_fi = max(1, min(widths[i], 10 // bws[i]))
+        fan_ins.append(data.draw(st.integers(1, max_fi), label=f"fi{i}"))
+    batch = data.draw(st.integers(1, 40), label="batch")
+    seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+
+    layers = _random_stack(widths, fan_ins, bws, seed=seed)
+    # chain input codes must respect each layer's input bit-width: layer
+    # i+1 reads layer i's output codes, so feed bw-consistent tables only.
+    for i in range(n_layers - 1):
+        idx, tab, bw = layers[i]
+        layers[i] = (idx, tab % (2 ** bws[i + 1]), bw)
+
+    codes = jnp.asarray(np.random.default_rng(seed).integers(
+        0, 2 ** bws[0], (batch, widths[0]), dtype=np.int32))
+    want = _ref_forward(codes, layers)
+    got = lut_network_pallas(codes, build_network_slabs(layers),
+                             block_b=16, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

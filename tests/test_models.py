@@ -9,13 +9,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# Dense-reference equivalence sweeps run 5-15 s per case; excluded from fast CI.
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_smoke_config
 from repro.kernels.ref import flash_attention_ref
 from repro.models import attention as ATT
 from repro.models import model as M
 from repro.models import moe as MOE
 from repro.models import ssm as SSM
-from repro.models.config import ModelCfg, MoECfg, SSMCfg
+from repro.models.config import ModelCfg, MoECfg
 
 
 # ---------------------------------------------------------------------------

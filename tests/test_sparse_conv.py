@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.layers import (SparseConvCfg, sparse_conv_apply,
                                sparse_conv_init)

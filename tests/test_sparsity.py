@@ -3,7 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # real when installed
 
 from repro.core import sparsity as sp
 

@@ -20,6 +20,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# End-to-end training/serving runs, several 10-30 s each (some flaky on
+# bare CPU); excluded from the fast CI lane via -m "not slow".
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

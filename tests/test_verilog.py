@@ -9,7 +9,7 @@ from repro.core import logicnet as LN
 from repro.core import netlist as NL
 from repro.core.quantize import codes
 from repro.core.table_infer import network_table_forward
-from repro.core.verilog import evaluate_verilog, generate_verilog
+from repro.core.verilog import evaluate_verilog
 
 
 def _toy(seed=0):
