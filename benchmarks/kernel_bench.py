@@ -25,10 +25,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compile as rcompile
 from repro.kernels import ref
 from repro.kernels.lut_lookup import lut_lookup_pallas
-from repro.kernels.lut_network import build_network_slabs, lut_network_pallas
-from repro.kernels.ops import flash_attention, lut_lookup, masked_matmul
+from repro.kernels.lut_network import (build_network_slabs,
+                                       estimate_slab_bytes,
+                                       lut_network_pallas)
+from repro.kernels.ops import (FUSED_VMEM_BUDGET_BYTES, flash_attention,
+                               lut_lookup, masked_matmul)
 
 Row = tuple[str, float, str]
 
@@ -111,13 +115,40 @@ LUT_NETWORK_CASES = {
 }
 
 
+def _slab_report(layers, opt=None) -> dict:
+    """Raw-vs-optimized slab footprint + fused-path eligibility.
+
+    ``opt`` takes pre-optimized triples when the caller already ran the
+    compiler (avoids compiling the same stack twice).
+    """
+    if opt is None:
+        opt = rcompile.optimize_triples(layers, level=2)
+    raw_bytes, _, raw_f32 = estimate_slab_bytes(layers)
+    opt_bytes, _, opt_f32 = estimate_slab_bytes(opt)
+    # eligibility mirrors ops.lut_network's actual gate: slabs under the
+    # VMEM budget AND codes exact in the kernel's f32 one-hot gathers
+    return {
+        "slab_bytes_raw": raw_bytes,
+        "slab_bytes_optimized": opt_bytes,
+        "slab_reduction_pct": 100.0 * (1.0 - opt_bytes / raw_bytes),
+        "fused_eligible_raw": (raw_f32
+                               and raw_bytes <= FUSED_VMEM_BUDGET_BYTES),
+        "fused_eligible_optimized": (opt_f32
+                                     and opt_bytes
+                                     <= FUSED_VMEM_BUDGET_BYTES),
+    }
+
+
 def lut_network_rows(smoke: bool = False) -> tuple[list[Row], dict]:
     """Per-layer vs fused whole-network inference on LogicNet stacks.
 
     Returns (rows, extras); ``extras['fused_speedup']`` is the headline
     per-layer/fused ratio on the fpga4hep model A stack — the number the
     BENCH artifacts track.  Both paths run through Pallas (interpret mode
-    off-TPU), jitted, so timings compare execution not tracing.
+    off-TPU), jitted, so timings compare execution not tracing.  Each case
+    also records raw-vs-``repro.compile``-optimized slab bytes and fused
+    eligibility, so the compiler's effect on the fused path is tracked
+    over time alongside the speedup.
     """
     iters, warmup = (5, 2) if smoke else (20, 3)
     rows: list[Row] = []
@@ -154,10 +185,44 @@ def lut_network_rows(smoke: bool = False) -> tuple[list[Row], dict]:
             "us_per_layer_path": us_per, "us_fused": us_fused,
             "fused_speedup": speedup,
             "slab_bytes": slabs.vmem_bytes(), "packed": slabs.packed,
+            **_slab_report(layers),
         }
         if name == "fpga4hep_modelA":
             extras["fused_speedup"] = speedup
+    extras["compile"] = compile_stats_case()
     return rows, extras
+
+
+def compile_stats_case() -> dict:
+    """Truth-table compiler on a *generated* fpga4hep model A stack.
+
+    Random tables barely compress (every code is emitted, no structure);
+    the compiler's real effect shows on tables generated from an actual
+    quantized model, so this is the stack the acceptance numbers and the
+    CI compile-stats artifact track: raw vs optimized packed table bytes,
+    fused-slab bytes, and the per-pass reduction statistics.
+    """
+    import jax as _jax
+    from repro.configs import fpga4hep
+    from repro.core import logicnet as LN
+
+    cfg = fpga4hep.model_a()
+    model = LN.init(cfg, _jax.random.PRNGKey(0))
+    x = _jax.random.uniform(_jax.random.PRNGKey(1),
+                            (256, cfg.in_features), minval=-1, maxval=3)
+    _, model = LN.forward(cfg, model, x, train=True)   # settle BN stats
+    tables = LN.generate_tables(cfg, model)
+    res = rcompile.optimize(tables, level=2, in_features=cfg.in_features)
+    triples = [(tt.indices, tt.table, tt.bw_in) for tt in tables]
+    opt_triples = [(tt.indices, tt.table, tt.bw_in) for tt in res.tables]
+    report = {
+        "case": "fpga4hep_modelA_generated",
+        "level": 2,
+        **_slab_report(triples, opt=opt_triples),
+        "stats": res.stats.as_dict(),
+        "summary": rcompile.summarize(res.stats),
+    }
+    return report
 
 
 def main() -> None:
@@ -180,6 +245,12 @@ def main() -> None:
         print(f"{name},{us:.1f},{derived}")
     print(f"# fused_speedup={extras.get('fused_speedup', float('nan')):.2f}x "
           f"(fpga4hep model A, {'smoke' if args.smoke else 'full'})")
+    comp = extras.get("compile", {})
+    if comp:
+        print(f"# compile[{comp['case']}]: {comp['summary']}")
+        print(f"# compile slab bytes: {comp['slab_bytes_raw']} -> "
+              f"{comp['slab_bytes_optimized']} "
+              f"(-{comp['slab_reduction_pct']:.1f}%)")
 
     if args.json:
         payload = {

@@ -31,6 +31,9 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=600)
     ap.add_argument("--out", default=None)
     ap.add_argument("--pipeline-registers", action="store_true")
+    ap.add_argument("--optimize-level", type=int, default=2,
+                    help="truth-table compiler level (0 disables; see "
+                         "repro.compile)")
     args = ap.parse_args()
 
     cfg = fpga4hep.MODELS[args.model]()
@@ -60,9 +63,27 @@ def main() -> None:
           f"{minimized} ({analytical / max(minimized, 1):.2f}x reduction; "
           "Vivado synthesis lands lower still, Table 5.2)")
 
+    opt = None
+    if args.optimize_level:
+        from repro import compile as rcompile
+        opt = rcompile.optimize(tables, args.optimize_level,
+                                in_features=cfg.in_features)
+        print(f"truth-table compiler: {rcompile.summarize(opt.stats)}")
+        # verify the already-optimized tables directly — one compile,
+        # reused for the Verilog emission below
+        f_codes, t_codes = LN.verify_tables(cfg, res.model, opt.tables,
+                                            xv[:200])
+        assert (np.asarray(f_codes) == np.asarray(t_codes)).all(), \
+            "optimized-table verification failed"
+        print("optimized-table functional verification: EXACT")
+
     if args.out:
-        files = LN.to_verilog(cfg, res.model,
-                              pipeline=args.pipeline_registers)
+        from repro.core import verilog as V
+        files = (V.generate_verilog(opt.netlist,
+                                    pipeline=args.pipeline_registers)
+                 if opt is not None else
+                 LN.to_verilog(cfg, res.model,
+                               pipeline=args.pipeline_registers))
         os.makedirs(args.out, exist_ok=True)
         for name, text in files.items():
             with open(os.path.join(args.out, name), "w") as f:

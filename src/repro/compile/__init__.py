@@ -1,0 +1,32 @@
+"""Truth-table compiler: netlist optimization passes for LogicNets.
+
+The generated tables are exact but maximally redundant — every neuron
+stores all ``2^(fan_in*bw_in)`` entries even for input codes the previous
+layer can never emit.  This package is the logic-synthesis step the paper
+delegates to Vivado, done at the netlist level so *both* deployment targets
+benefit: smaller packed slabs for the fused Pallas kernel (more stacks fit
+the VMEM budget) and fewer/narrower case-statement modules in the emitted
+Verilog.
+
+    from repro import compile as rcompile
+    res = rcompile.optimize(tables, level=2)
+    res.tables    # uniform LayerTruthTables (drop-in for the kernels)
+    res.netlist   # per-neuron Netlist with don't-care masks (Verilog)
+    res.stats     # per-pass reduction statistics
+
+Passes: reachable-code analysis + don't-care canonicalization, neuron CSE,
+dead-input pruning, constant folding / dead-neuron elimination.  See
+pipeline.py for the level ladder.
+"""
+
+from repro.compile.ir import CLayer, CNet, CNeuron, forward_codes
+from repro.compile.pipeline import (CompileStats, OptimizeResult, PassStats,
+                                    optimize, optimize_tables,
+                                    optimize_triples, raw_stats, summarize)
+
+__all__ = [
+    "CLayer", "CNet", "CNeuron", "forward_codes",
+    "CompileStats", "OptimizeResult", "PassStats",
+    "optimize", "optimize_tables", "optimize_triples", "raw_stats",
+    "summarize",
+]

@@ -1,0 +1,243 @@
+"""Compiler IR: a netlist with per-neuron variable fan-in.
+
+The generation-side IRs are rigid: ``LayerTruthTable`` forces one uniform
+``(out_features, fan_in)`` shape per layer (what the Pallas kernels want) and
+``Netlist`` is bus-addressed bits (what the Verilog generator wants).  The
+optimization passes need something in between — neurons whose fan-in and
+table *shrink independently* as don't-cares are folded, inputs pruned and
+duplicates merged.  ``CNet`` is that form: a list of layers, each a list of
+``CNeuron``s holding feature-level fan-in indices and a dense truth table of
+exactly ``2^(fan_in * bw_in)`` entries.
+
+Lowering goes both ways:
+
+  * ``CNet.to_tables()``  -> uniform ``LayerTruthTable`` list for the
+    table-forward / Pallas paths.  Neurons below the layer's max fan-in are
+    padded with a duplicate of their first input and the table tiled, so the
+    packed-entry convention (element k at bits [bw*k, bw*(k+1))) still
+    holds and padded digits are ignored by construction.
+  * ``CNet.to_netlist()`` -> exact per-neuron ``Netlist`` for Verilog; no
+    padding, each neuron keeps its own (possibly pruned) width, and the
+    per-entry reachability masks ride along for don't-care-aware emission.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.netlist import Netlist, NeuronHBB
+from repro.core.truth_table import LayerTruthTable
+
+
+@dataclasses.dataclass
+class CNeuron:
+    """One LUT neuron: feature indices into the previous layer + dense table.
+
+    ``reachable`` is a per-entry boolean mask filled in by the reachability
+    pass (None means "assume every entry reachable").  Entries with
+    ``reachable == False`` are don't-cares: their table values are
+    canonicalized copies of reachable entries and any rewrite that preserves
+    behaviour on reachable entries is legal.
+    """
+
+    indices: np.ndarray               # (fan_in,) int32, features of prev bus
+    table: np.ndarray                 # (2^(fan_in*bw_in),) int32 out codes
+    reachable: np.ndarray | None = None   # (2^(fan_in*bw_in),) bool
+
+    @property
+    def fan_in(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def n_entries(self) -> int:
+        return int(self.table.shape[0])
+
+
+@dataclasses.dataclass
+class CLayer:
+    neurons: list[CNeuron]
+    bw_in: int
+    bw_out: int
+
+    @property
+    def out_features(self) -> int:
+        return len(self.neurons)
+
+    def max_fan_in(self) -> int:
+        return max((n.fan_in for n in self.neurons), default=0)
+
+
+@dataclasses.dataclass
+class CNet:
+    in_features: int
+    layers: list[CLayer]
+
+    # -- construction -------------------------------------------------------
+
+    @staticmethod
+    def from_tables(tables: list[LayerTruthTable],
+                    in_features: int | None = None) -> "CNet":
+        if not tables:
+            raise ValueError("need at least one layer of truth tables")
+        if in_features is None:
+            in_features = int(np.max(tables[0].indices)) + 1
+        layers = []
+        width = in_features
+        for li, tt in enumerate(tables):
+            if int(np.max(tt.indices, initial=0)) >= width:
+                raise ValueError(
+                    f"layer {li} indexes feature "
+                    f"{int(np.max(tt.indices))} of a {width}-wide bus")
+            if li > 0 and tt.bw_in != tables[li - 1].bw_out:
+                raise ValueError(
+                    f"layer {li} bw_in={tt.bw_in} != upstream "
+                    f"bw_out={tables[li - 1].bw_out}")
+            if tt.n_entries != 1 << (tt.fan_in * tt.bw_in):
+                raise ValueError(
+                    f"layer {li}: {tt.n_entries} entries for "
+                    f"fan_in={tt.fan_in} at bw_in={tt.bw_in}")
+            neurons = [CNeuron(np.array(tt.indices[j], dtype=np.int32),
+                               np.array(tt.table[j], dtype=np.int32))
+                       for j in range(tt.out_features)]
+            layers.append(CLayer(neurons, tt.bw_in, tt.bw_out))
+            width = tt.out_features
+        return CNet(in_features, layers)
+
+    @staticmethod
+    def from_netlist(nl: Netlist) -> "CNet":
+        """Lift a bus-addressed ``Netlist`` back to feature indices.
+
+        Requires the per-layer ``layer_bw_in`` metadata that
+        ``build_netlist`` records; hand-built netlists without it cannot be
+        optimized (the bit->feature grouping would be ambiguous).
+        """
+        if nl.layer_bw_in is None:
+            raise ValueError(
+                "Netlist lacks layer_bw_in metadata (build it with "
+                "netlist.build_netlist, or optimize the LayerTruthTable "
+                "list instead)")
+        layers = []
+        for li, hbbs in enumerate(nl.layers):
+            bw = nl.layer_bw_in[li]
+            bw_out = hbbs[0].out_bits if hbbs else 0
+            neurons = []
+            for h in hbbs:
+                bits = np.asarray(h.input_bits)
+                groups = (bits.reshape(-1, bw)
+                          if len(bits) % bw == 0 else None)
+                feats = (None if groups is None
+                         else (groups[:, 0] // bw).astype(np.int32))
+                if groups is None or (
+                        groups != bw * (groups[:, :1] // bw)
+                        + np.arange(bw)).any():
+                    raise ValueError(
+                        f"L{li}N{h.neuron}: input bits are not whole "
+                        f"{bw}-bit feature groups")
+                neurons.append(CNeuron(feats,
+                                       np.array(h.table, dtype=np.int32)))
+            layers.append(CLayer(neurons, bw, bw_out))
+        return CNet(nl.in_bits // nl.layer_bw_in[0], layers)
+
+    # -- lowering -----------------------------------------------------------
+
+    def to_tables(self) -> list[LayerTruthTable]:
+        """Uniform per-layer tables (the Pallas / table-forward contract)."""
+        tables = []
+        for layer in self.layers:
+            fi = max(layer.max_fan_in(), 1)
+            n_entries = 1 << (fi * layer.bw_in)
+            o = layer.out_features
+            idx = np.zeros((o, fi), dtype=np.int32)
+            tab = np.empty((o, n_entries), dtype=np.int32)
+            for j, n in enumerate(layer.neurons):
+                pad = n.indices[0] if n.fan_in else np.int32(0)
+                idx[j, :n.fan_in] = n.indices
+                idx[j, n.fan_in:] = pad
+                # trailing padded elements are the high digits of the packed
+                # entry, so tiling repeats the true table and the padded
+                # digits are ignored — bit-exact by construction
+                tab[j] = np.tile(n.table, n_entries // n.n_entries)
+            tables.append(LayerTruthTable(tab, idx, layer.bw_in,
+                                          layer.bw_out))
+        return tables
+
+    def to_netlist(self) -> Netlist:
+        """Exact per-neuron netlist (the Verilog contract), masks attached."""
+        layers = []
+        for li, layer in enumerate(self.layers):
+            hbbs = []
+            for j, n in enumerate(layer.neurons):
+                bits = [layer.bw_in * int(f) + b for f in n.indices
+                        for b in range(layer.bw_in)]
+                hbbs.append(NeuronHBB(li, j, bits, layer.bw_out,
+                                      n.table.copy(),
+                                      reachable=(None if n.reachable is None
+                                                 else n.reachable.copy())))
+            layers.append(hbbs)
+        in_bits = self.layers[0].bw_in * self.in_features
+        out_bits = self.layers[-1].bw_out * self.layers[-1].out_features
+        return Netlist(in_bits, out_bits, layers,
+                       layer_bw_in=[lay.bw_in for lay in self.layers])
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def n_neurons(self) -> int:
+        return sum(lay.out_features for lay in self.layers)
+
+    @property
+    def n_table_entries(self) -> int:
+        return sum(n.n_entries for lay in self.layers for n in lay.neurons)
+
+    def table_bytes(self) -> int:
+        """Per-neuron packed storage (codes at the minimal int width)."""
+        from repro.core.lut_cost import code_width
+
+        return sum(code_width(lay.bw_out)
+                   * sum(n.n_entries for n in lay.neurons)
+                   for lay in self.layers)
+
+    def lut_cost(self) -> int:
+        """Analytical 6-LUT cost, identical to
+        ``lut_cost.netlist_lut_cost(self.to_netlist())`` but with no
+        netlist materialization (no table copies)."""
+        from repro.core.lut_cost import lut_cost
+
+        return sum(lut_cost(max(n.fan_in * lay.bw_in, 1), lay.bw_out)
+                   for lay in self.layers for n in lay.neurons)
+
+    def validate(self) -> None:
+        width = self.in_features
+        for li, lay in enumerate(self.layers):
+            for n in lay.neurons:
+                if n.fan_in and int(n.indices.max()) >= width:
+                    raise ValueError(f"layer {li}: index out of range")
+                if n.n_entries != 1 << (n.fan_in * lay.bw_in):
+                    raise ValueError(f"layer {li}: table size mismatch")
+                if n.reachable is not None and (
+                        n.reachable.shape != n.table.shape):
+                    raise ValueError(f"layer {li}: reachable mask mismatch")
+            if li + 1 < len(self.layers) and (
+                    lay.bw_out != self.layers[li + 1].bw_in):
+                raise ValueError(f"layer {li}: bw_out/bw_in mismatch")
+            width = lay.out_features
+
+
+def forward_codes(net: CNet, in_codes: np.ndarray) -> np.ndarray:
+    """Plain-numpy reference forward over the variable-fan-in IR.
+
+    Independent of the lowering paths on purpose: the tests use it to pin
+    ``to_tables`` padding and the jnp/Pallas consumers to the same oracle.
+    """
+    c = np.asarray(in_codes)
+    for lay in net.layers:
+        out = np.empty((c.shape[0], lay.out_features), dtype=np.int64)
+        for j, n in enumerate(lay.neurons):
+            entry = np.zeros(c.shape[0], dtype=np.int64)
+            for k, f in enumerate(n.indices):
+                entry |= c[:, int(f)].astype(np.int64) << (lay.bw_in * k)
+            out[:, j] = n.table[entry]
+        c = out
+    return c

@@ -1,0 +1,240 @@
+"""The truth-table compiler driver: ``optimize(netlist, level=...)``.
+
+Levels (each includes the previous):
+
+  0 — no rewriting; analysis + lowering only (stats still reported).
+  1 — reachable-code analysis / don't-care canonicalization + dead-neuron
+      elimination.
+  2 — (default) + neuron CSE and dead-input pruning, one round.
+  3 — run the full round to a fixpoint: constants exposed by one round's
+      pruning collapse further consumers in the next, until nothing changes.
+
+The input is either a ``list[LayerTruthTable]`` (straight from
+``logicnet.generate_tables``) or a ``Netlist`` built by
+``netlist.build_netlist``.  The result carries all three views of the
+optimized network — uniform tables for the jnp/Pallas paths, an exact
+per-neuron netlist for Verilog, and the raw IR — plus per-pass statistics
+and before/after storage + LUT-cost accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.compile import passes, reachability
+from repro.compile.ir import CNet
+from repro.core.netlist import Netlist
+from repro.core.truth_table import LayerTruthTable
+
+MAX_ROUNDS = 16  # fixpoint guard; each round strictly shrinks the net
+
+
+@dataclasses.dataclass(frozen=True)
+class PassStats:
+    """One pass execution: what it removed and what it cost."""
+
+    name: str
+    round: int
+    seconds: float
+    detail: dict
+
+    def as_dict(self) -> dict:
+        return {"name": self.name, "round": self.round,
+                "seconds": self.seconds, **self.detail}
+
+
+@dataclasses.dataclass
+class CompileStats:
+    level: int
+    rounds: int
+    passes: list[PassStats]
+    neurons_before: int
+    neurons_after: int
+    table_entries_before: int
+    table_entries_after: int
+    table_bytes_before: int
+    table_bytes_after: int
+    lut_cost_before: int
+    lut_cost_after: int
+
+    @property
+    def dont_care_entries(self) -> int:
+        return sum(p.detail.get("dont_care_entries", 0)
+                   for p in self.passes if p.round == 0)
+
+    def as_dict(self) -> dict:
+        return {
+            "level": self.level,
+            "rounds": self.rounds,
+            "neurons_before": self.neurons_before,
+            "neurons_after": self.neurons_after,
+            "table_entries_before": self.table_entries_before,
+            "table_entries_after": self.table_entries_after,
+            "table_bytes_before": self.table_bytes_before,
+            "table_bytes_after": self.table_bytes_after,
+            "lut_cost_before": self.lut_cost_before,
+            "lut_cost_after": self.lut_cost_after,
+            "dont_care_entries": self.dont_care_entries,
+            "passes": [p.as_dict() for p in self.passes],
+        }
+
+
+@dataclasses.dataclass
+class OptimizeResult:
+    """Optimized network in every consumer's native representation."""
+
+    cnet: CNet
+    stats: CompileStats
+
+    @property
+    def tables(self) -> list[LayerTruthTable]:
+        """Uniform per-layer tables for table_infer / the Pallas kernels."""
+        if self._tables is None:
+            self._tables = self.cnet.to_tables()
+        return self._tables
+
+    @property
+    def netlist(self) -> Netlist:
+        """Exact per-neuron netlist (with don't-care masks) for Verilog."""
+        if self._netlist is None:
+            self._netlist = self.cnet.to_netlist()
+        return self._netlist
+
+    def __post_init__(self) -> None:
+        self._tables: list[LayerTruthTable] | None = None
+        self._netlist: Netlist | None = None
+
+
+def _as_cnet(netlist, in_features: int | None) -> CNet:
+    if isinstance(netlist, CNet):
+        return netlist
+    if isinstance(netlist, Netlist):
+        return CNet.from_netlist(netlist)
+    return CNet.from_tables(list(netlist), in_features)
+
+
+def _shape_signature(net: CNet) -> tuple:
+    return tuple((lay.out_features,
+                  tuple(n.fan_in for n in lay.neurons),
+                  sum(int(n.table.sum()) for n in lay.neurons))
+                 for lay in net.layers)
+
+
+def optimize(netlist, level: int = 2, *,
+             in_features: int | None = None) -> OptimizeResult:
+    """Run the pass pipeline; see module docstring for the level ladder.
+
+    ``netlist`` is a ``list[LayerTruthTable]``, a ``Netlist`` (from
+    ``build_netlist``), or a ``CNet``.  The optimized network computes the
+    same function as the input on every reachable input, bit-exactly —
+    per-layer, fused-kernel and Verilog lowerings included.
+    """
+    if not 0 <= level <= 3:
+        raise ValueError(f"optimize level must be in [0, 3], got {level}")
+    net = _as_cnet(netlist, in_features)
+    net.validate()
+
+    before_neurons = net.n_neurons
+    before_entries = net.n_table_entries
+    before_bytes = net.table_bytes()
+    before_lut = net.lut_cost()
+
+    pass_stats: list[PassStats] = []
+
+    def run(name: str, fn, rnd: int) -> dict:
+        t0 = time.perf_counter()
+        detail = fn(net)
+        pass_stats.append(PassStats(name, rnd, time.perf_counter() - t0,
+                                    detail))
+        return detail
+
+    rounds = 0
+    if level == 0:
+        # analysis-only: reachability stats with no rewriting at all
+        run("reachability",
+            lambda n: reachability.analyze_and_canonicalize(
+                n, rewrite=False), 0)
+    else:
+        max_rounds = MAX_ROUNDS if level >= 3 else 1
+        for rnd in range(max_rounds):
+            sig = _shape_signature(net)
+            run("reachability", reachability.analyze_and_canonicalize, rnd)
+            if level >= 2:
+                run("prune_dead_inputs", passes.prune_dead_inputs, rnd)
+                run("cse", passes.cse, rnd)
+            run("fold_and_eliminate", passes.fold_and_eliminate, rnd)
+            rounds = rnd + 1
+            if _shape_signature(net) == sig:
+                break
+    net.validate()
+
+    stats = CompileStats(
+        level=level, rounds=rounds, passes=pass_stats,
+        neurons_before=before_neurons, neurons_after=net.n_neurons,
+        table_entries_before=before_entries,
+        table_entries_after=net.n_table_entries,
+        table_bytes_before=before_bytes, table_bytes_after=net.table_bytes(),
+        lut_cost_before=before_lut,
+        lut_cost_after=net.lut_cost(),
+    )
+    return OptimizeResult(net, stats)
+
+
+def optimize_tables(tables: list[LayerTruthTable], level: int = 2, *,
+                    in_features: int | None = None
+                    ) -> list[LayerTruthTable]:
+    """Convenience: tables in, optimized uniform tables out."""
+    return optimize(tables, level, in_features=in_features).tables
+
+
+def optimize_triples(layers, level: int = 2, *,
+                     in_features: int | None = None) -> list[tuple]:
+    """``(indices, table, bw_in)`` triples in/out — ``ops.lut_network``'s
+    wire format.  Output bit-widths are inferred (the next layer's
+    ``bw_in``; widest code for the last layer) since triples don't carry
+    them; they only affect storage accounting, not the computed function.
+    """
+    triples = [(np.asarray(i), np.asarray(t), int(b)) for i, t, b in layers]
+    tables = []
+    for li, (idx, tab, bw) in enumerate(triples):
+        if li + 1 < len(triples):
+            bw_out = triples[li + 1][2]
+        else:
+            bw_out = max(1, int(tab.max(initial=0)).bit_length())
+        tables.append(LayerTruthTable(tab.astype(np.int32),
+                                      idx.astype(np.int32), bw, bw_out))
+    opt = optimize(tables, level, in_features=in_features).tables
+    return [(tt.indices, tt.table, tt.bw_in) for tt in opt]
+
+
+def raw_stats(tables: list[LayerTruthTable],
+              in_features: int | None = None) -> dict:
+    """Storage/cost accounting of an *unoptimized* table stack (for the
+    bench JSON's raw-vs-optimized comparison)."""
+    net = CNet.from_tables(tables, in_features)
+    return {"neurons": net.n_neurons,
+            "table_entries": net.n_table_entries,
+            "table_bytes": net.table_bytes(),
+            "lut_cost": net.lut_cost()}
+
+
+def summarize(stats: CompileStats) -> str:
+    """One-line human summary (the bench prints it next to timings)."""
+    s = stats
+
+    def pct(a, b):
+        return 100.0 * (1.0 - a / b) if b else 0.0
+    return (f"level={s.level} rounds={s.rounds} "
+            f"neurons {s.neurons_before}->{s.neurons_after} "
+            f"entries {s.table_entries_before}->{s.table_entries_after} "
+            f"bytes {s.table_bytes_before}->{s.table_bytes_after} "
+            f"(-{pct(s.table_bytes_after, s.table_bytes_before):.1f}%) "
+            f"LUTs {s.lut_cost_before}->{s.lut_cost_after}")
+
+
+__all__ = ["optimize", "optimize_tables", "optimize_triples",
+           "raw_stats", "summarize",
+           "OptimizeResult", "CompileStats", "PassStats", "MAX_ROUNDS"]

@@ -168,17 +168,21 @@ def generate_tables(cfg: LogicNetCfg, model: list[dict]
 
 def verify_tables(cfg: LogicNetCfg, model: list[dict],
                   tables: list[TT.LayerTruthTable], x: jax.Array,
-                  fused: bool = False) -> tuple[jax.Array, jax.Array]:
+                  fused: bool = False,
+                  optimize_level: int | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
     """Functional verification: float path vs table path on the sparse stack.
 
     Returns (codes_float_path, codes_table_path); the contract is exact
     equality.  ``fused`` runs the table path through the whole-network
-    Pallas kernel instead of the per-layer jnp reference.
+    Pallas kernel instead of the per-layer jnp reference;
+    ``optimize_level`` first shrinks the tables through the truth-table
+    compiler (``repro.compile``) — the equality contract must survive it.
     """
     cfgs = cfg.layer_cfgs()
     in_codes = codes(cfgs[0].in_quant, x)
-    table_out = table_infer.network_table_forward(tables, in_codes,
-                                                  fused=fused)
+    table_out = table_infer.network_table_forward(
+        tables, in_codes, fused=fused, optimize_level=optimize_level)
 
     h = x
     layer = None
@@ -193,15 +197,18 @@ def verify_tables(cfg: LogicNetCfg, model: list[dict],
 
 def sparse_head_forward(cfg: LogicNetCfg, model: list[dict],
                         tables: list[TT.LayerTruthTable],
-                        x: jax.Array, fused: bool = False) -> jax.Array:
+                        x: jax.Array, fused: bool = False,
+                        optimize_level: int | None = None) -> jax.Array:
     """Deployment-style forward: sparse stack via tables, then the dense
     final layer (if any) in arithmetic.  ``fused`` executes the sparse
-    stack as one whole-network Pallas kernel (the FPGA-pipeline path)."""
+    stack as one whole-network Pallas kernel (the FPGA-pipeline path);
+    ``optimize_level`` runs the truth-table compiler first so the fused
+    slabs shrink (bit-identical output on reachable inputs)."""
     cfgs = cfg.layer_cfgs()
     c0 = cfgs[0]
     in_codes = codes(c0.in_quant, x)
-    out_codes = table_infer.network_table_forward(tables, in_codes,
-                                                  fused=fused)
+    out_codes = table_infer.network_table_forward(
+        tables, in_codes, fused=fused, optimize_level=optimize_level)
     if len(tables) == len(cfgs):
         return out_codes
     cfin = cfgs[-1]
@@ -211,8 +218,17 @@ def sparse_head_forward(cfg: LogicNetCfg, model: list[dict],
 
 
 def to_verilog(cfg: LogicNetCfg, model: list[dict],
-               pipeline: bool = False) -> dict[str, str]:
+               pipeline: bool = False,
+               optimize_level: int | None = None) -> dict[str, str]:
+    """Generate RTL; ``optimize_level`` routes the netlist through the
+    truth-table compiler first — deduped/shrunk case-statement modules with
+    don't-care entries folded into each module's ``default:`` arm."""
     from repro.core import verilog
     tables = generate_tables(cfg, model)
-    nl = NL.build_netlist(tables, cfg.in_features)
+    if optimize_level is not None:
+        from repro.compile import optimize
+        nl = optimize(tables, optimize_level,
+                      in_features=cfg.in_features).netlist
+    else:
+        nl = NL.build_netlist(tables, cfg.in_features)
     return verilog.generate_verilog(nl, pipeline)

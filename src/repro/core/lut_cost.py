@@ -11,6 +11,18 @@ from __future__ import annotations
 import dataclasses
 
 
+def code_width(bits: int) -> int:
+    """Bytes of the smallest {1, 2, 4}-byte int holding a ``bits``-bit code.
+
+    The single source of truth for packed-table storage accounting
+    (``Netlist.table_bytes``, ``CNet.table_bytes``,
+    ``table_infer.table_memory_bytes``, ``table_vmem_bytes``) — these
+    byte counts feed the raw-vs-optimized comparisons in the CI
+    COMPILE_stats artifact, so they must all use the same ladder.
+    """
+    return 1 if bits <= 8 else (2 if bits <= 16 else 4)
+
+
 def lut_cost_per_bit(n_fan_in_bits: int) -> int:
     """6-LUT count for one output bit of a neuron with N fan-in bits.
 
@@ -106,6 +118,22 @@ def sparse_conv_pw_cost(out_pix: int, o_bits: int, n_ofm: int, x_s: int,
     return out_pix * o_bits * n_ofm * lut_cost_per_bit(x_s * i_bits)
 
 
+def netlist_lut_cost(netlist) -> int:
+    """Analytical 6-LUT cost of a (possibly optimized) ``Netlist``.
+
+    Per-neuron ``lut_cost(len(input_bits), out_bits)`` summed over the net —
+    the quantity the compile pipeline reports as pre- vs post-optimization
+    cost.  Unlike the config-level ``sparse_linear_cost`` this prices each
+    neuron at its *own* width, so pruned inputs and eliminated neurons show
+    up directly.
+    """
+    total = 0
+    for layer in netlist.layers:
+        for n in layer:
+            total += lut_cost(max(len(n.input_bits), 1), n.out_bits)
+    return total
+
+
 # ---------------------------------------------------------------------------
 # TPU-path cost model (hardware adaptation, see DESIGN.md §2)
 # ---------------------------------------------------------------------------
@@ -118,10 +146,4 @@ def table_vmem_bytes(out_features: int, fan_in: int, bw_in: int,
     smallest of {1, 2, 4} bytes that holds bw_out bits.
     """
     entries = 2 ** (fan_in * bw_in)
-    if bw_out <= 8:
-        width = 1
-    elif bw_out <= 16:
-        width = 2
-    else:
-        width = 4
-    return out_features * entries * width
+    return out_features * entries * code_width(bw_out)

@@ -17,13 +17,23 @@ from repro.core.truth_table import LayerTruthTable
 
 @dataclasses.dataclass
 class NeuronHBB:
-    """One hardware building block (a configured multi-bit LUT)."""
+    """One hardware building block (a configured multi-bit LUT).
+
+    ``reachable`` (optional, set by the compile pipeline) marks which table
+    entries can actually occur at runtime; unreachable entries are
+    don't-cares that the Verilog generator may fold into a ``default:`` arm.
+    """
 
     layer: int
     neuron: int
     input_bits: list[int]     # positions on the incoming layer bus, LSB first
     out_bits: int
     table: np.ndarray         # (2^len(input_bits),) output codes
+    reachable: np.ndarray | None = None   # (2^len(input_bits),) bool
+
+    @property
+    def n_entries(self) -> int:
+        return int(self.table.shape[0])
 
 
 @dataclasses.dataclass
@@ -31,10 +41,21 @@ class Netlist:
     in_bits: int                     # width of the input bus M0
     out_bits: int                    # width of the output bus
     layers: list[list[NeuronHBB]]
+    # per-layer input code width; recorded by build_netlist (and the compile
+    # pipeline's lowering) so the optimizer can lift bus bits back to
+    # feature indices.  None on hand-built netlists.
+    layer_bw_in: list[int] | None = None
 
     @property
     def n_hbbs(self) -> int:
         return sum(len(l) for l in self.layers)
+
+    def table_bytes(self) -> int:
+        """Per-neuron packed table storage (minimal {1,2,4}-byte codes)."""
+        from repro.core.lut_cost import code_width
+
+        return sum(n.n_entries * code_width(n.out_bits)
+                   for layer in self.layers for n in layer)
 
 
 def build_netlist(tables: list[LayerTruthTable], in_features: int) -> Netlist:
@@ -59,4 +80,5 @@ def build_netlist(tables: list[LayerTruthTable], in_features: int) -> Netlist:
         bus_features = tt.out_features
     in_bits = tables[0].bw_in * in_features
     out_bits = tables[-1].bw_out * tables[-1].out_features
-    return Netlist(in_bits, out_bits, layers)
+    return Netlist(in_bits, out_bits, layers,
+                   layer_bw_in=[tt.bw_in for tt in tables])

@@ -38,7 +38,8 @@ def layer_table_forward(tt: LayerTruthTable, codes: jax.Array) -> jax.Array:
 
 def network_table_forward(tables: list[LayerTruthTable],
                           in_codes: jax.Array,
-                          fused: bool = False) -> jax.Array:
+                          fused: bool = False,
+                          optimize_level: int | None = None) -> jax.Array:
     """Full sparse-stack forward on integer codes.
 
     ``fused=True`` routes through the whole-network Pallas kernel
@@ -47,7 +48,16 @@ def network_table_forward(tables: list[LayerTruthTable],
     to per-layer execution when the fused slabs would overflow VMEM.  Both
     paths are bit-exact with this function's plain-jnp semantics — that
     equality is the kernel's verification contract.
+
+    ``optimize_level`` (0-3) first runs the truth-table compiler
+    (``repro.compile.optimize``) over the stack — don't-care
+    canonicalization, CSE, dead-input pruning, DCE — shrinking the tables
+    while keeping the output bit-identical on every reachable input.
     """
+    if optimize_level is not None:
+        from repro.compile import optimize_tables
+        tables = optimize_tables(list(tables), optimize_level,
+                                 in_features=in_codes.shape[-1])
     if fused:
         from repro.kernels.ops import lut_network
         return lut_network(in_codes,
@@ -61,8 +71,7 @@ def network_table_forward(tables: list[LayerTruthTable],
 
 def table_memory_bytes(tables: list[LayerTruthTable]) -> int:
     """Table 5.1-style storage accounting (packed to minimal int width)."""
-    total = 0
-    for tt in tables:
-        width = 1 if tt.bw_out <= 8 else (2 if tt.bw_out <= 16 else 4)
-        total += tt.out_features * tt.n_entries * width
-    return total
+    from repro.core.lut_cost import code_width
+
+    return sum(tt.out_features * tt.n_entries * code_width(tt.bw_out)
+               for tt in tables)

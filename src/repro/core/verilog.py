@@ -26,15 +26,36 @@ def _concat_expr(bus: str, bits: list[int]) -> str:
 
 
 def neuron_module(name: str, n_in_bits: int, out_bits: int,
-                  table: np.ndarray) -> str:
+                  table: np.ndarray,
+                  reachable: np.ndarray | None = None) -> str:
+    """One case-statement LUT module, always with an explicit ``default:``.
+
+    Without the default arm an incomplete case would make the synthesized
+    combinational block diverge from ``evaluate_verilog`` (and infer a
+    latch) on any uncovered input.  When a ``reachable`` mask is given
+    (compile-pipeline output), unreachable entries are don't-cares: they are
+    folded into the default arm, whose value is the most common *reachable*
+    output code — and reachable arms equal to it are omitted too, since the
+    default reproduces them exactly.
+    """
     lines = [f"module {name} ( input [{n_in_bits - 1}:0] M0, "
              f"output [{out_bits - 1}:0] M1 );",
              f"  reg [{out_bits - 1}:0] M1;",
              "  always @ (M0) begin",
              "    case (M0)"]
+    if reachable is None:
+        default = 0
+        emit = np.ones(len(table), dtype=bool)
+    else:
+        vals, counts = np.unique(np.asarray(table)[reachable],
+                                 return_counts=True)
+        default = int(vals[np.argmax(counts)])
+        emit = reachable & (np.asarray(table) != default)
     for entry, code in enumerate(table):
-        lines.append(f"      {n_in_bits}'d{entry}: "
-                     f"M1 = {out_bits}'d{int(code)};")
+        if emit[entry]:
+            lines.append(f"      {n_in_bits}'d{entry}: "
+                         f"M1 = {out_bits}'d{int(code)};")
+    lines.append(f"      default: M1 = {out_bits}'d{default};")
     lines += ["    endcase", "  end", "endmodule"]
     return "\n".join(lines)
 
@@ -98,7 +119,7 @@ def generate_verilog(netlist: Netlist, pipeline: bool = False) -> dict[str, str]
         for n in layer:
             name = f"LUT_L{l}_N{n.neuron}"
             files[f"{name}.v"] = neuron_module(
-                name, len(n.input_bits), n.out_bits, n.table)
+                name, len(n.input_bits), n.out_bits, n.table, n.reachable)
     return files
 
 
@@ -107,6 +128,8 @@ def generate_verilog(netlist: Netlist, pipeline: bool = False) -> dict[str, str]
 # ---------------------------------------------------------------------------
 
 _CASE_RE = re.compile(r"(\d+)'d(\d+):\s*M1\s*=\s*(\d+)'d(\d+);")
+_DEFAULT_RE = re.compile(r"default:\s*M1\s*=\s*(\d+)'d(\d+);")
+_WIDTH_RE = re.compile(r"input \[(\d+):0\] M0")
 _WIRE_RE = re.compile(
     r"wire \[(\d+):0\] (inpWire\d+_\d+) = \{([^}]*)\};")
 _INST_RE = re.compile(
@@ -119,12 +142,14 @@ def _parse_tables(files: dict[str, str]) -> dict[str, np.ndarray]:
     for fname, text in files.items():
         if not fname.startswith("LUT_L"):
             continue
-        entries = {}
+        n_in_bits = int(_WIDTH_RE.search(text).group(1)) + 1
+        dm = _DEFAULT_RE.search(text)
+        default = int(dm.group(2)) if dm else 0
+        # every entry not listed as an explicit arm takes the default value
+        # — exactly the case-statement semantics synthesis sees
+        table = np.full(1 << n_in_bits, default, dtype=np.int64)
         for m in _CASE_RE.finditer(text):
-            entries[int(m.group(2))] = int(m.group(4))
-        table = np.zeros(max(entries) + 1, dtype=np.int64)
-        for k, v in entries.items():
-            table[k] = v
+            table[int(m.group(2))] = int(m.group(4))
         tables[fname[:-2]] = table
     return tables
 

@@ -16,14 +16,20 @@ activation codes stay in registers/VMEM from network input to network
 output — one ``pallas_call`` for the whole sparse stack, exactly as the
 fabric holds the whole net.
 
-Layout:
+Layout — layers are *row-stacked*, not padded to a (L, O_max, ...) box:
 
-  * ``idx_slab``   (L, O_max, FI_max) int32 — layer l's fan-in indices in
-    ``[l, :O_l, :FI_l]``; padding is zero and never read (static slices).
-  * ``table_slab`` (L, O_max, E_max) int32, or int8 when every layer's
+  * ``idx_slab``   (sum_l O_l, FI_max) int32 — layer l's fan-in indices in
+    rows ``[row_off_l, row_off_l + O_l)``; padding is zero and never read
+    (per-layer static slices, offsets compiled into the kernel).
+  * ``table_slab`` (sum_l O_l, E_max) int32, or int8 when every layer's
     output codes fit a byte (``bw_out <= 8``).  Packed tables are widened
     in-kernel with a mask, quartering the VMEM footprint so deeper stacks
     stay under the budget that ``ops.lut_network`` enforces.
+
+Row-stacking means a narrow layer costs only its own rows — heterogeneous
+stacks (and stacks shrunk by ``repro.compile``'s dead-neuron elimination)
+get proportionally smaller slabs, where the old box layout paid
+``L * O_max`` rows regardless.
 
 Per layer the fan-in gather is the same one-hot MXU contraction as
 ``lut_lookup``, but the table gather is upgraded from a streamed
@@ -61,8 +67,8 @@ class LayerMeta(NamedTuple):
 class NetworkSlabs:
     """A whole sparse stack packed for single-kernel execution."""
 
-    idx_slab: jax.Array      # (L, O_max, FI_max) int32
-    table_slab: jax.Array    # (L, O_max, E_max) int32 | int8 (packed)
+    idx_slab: jax.Array      # (sum_l O_l, FI_max) int32
+    table_slab: jax.Array    # (sum_l O_l, E_max) int32 | int8 (packed)
     meta: tuple[LayerMeta, ...]
     packed: bool
 
@@ -89,8 +95,7 @@ def estimate_slab_bytes(layers: Sequence[tuple]) -> tuple[int, bool, bool]:
     code is outside [0, 2^24), where the kernel's f32 one-hot gather
     would round.
     """
-    n_l = len(layers)
-    o_max = max(np.asarray(t).shape[0] for _, t, _ in layers)
+    o_sum = sum(np.asarray(t).shape[0] for _, t, _ in layers)
     fi_max = max(np.asarray(i).shape[1] for i, _, _ in layers)
     e_max = max(np.asarray(t).shape[1] for _, t, _ in layers)
     lo_hi = [(int(np.min(t, initial=0)), int(np.max(t, initial=0)))
@@ -98,8 +103,8 @@ def estimate_slab_bytes(layers: Sequence[tuple]) -> tuple[int, bool, bool]:
     pack = all(lo >= 0 and hi < 256 for lo, hi in lo_hi)
     f32_exact = all(lo >= 0 and hi < 1 << 24 for lo, hi in lo_hi)
     table_itemsize = 1 if pack else 4
-    return (n_l * o_max * fi_max * 4
-            + n_l * o_max * e_max * table_itemsize), pack, f32_exact
+    return (o_sum * fi_max * 4
+            + o_sum * e_max * table_itemsize), pack, f32_exact
 
 
 def build_network_slabs(layers: Sequence[tuple], *,
@@ -131,21 +136,22 @@ def build_network_slabs(layers: Sequence[tuple], *,
         metas.append(m)
         idx_np.append(idx)
         tab_np.append(tab)
-    n_l = len(metas)
-    o_max = max(m.n_out for m in metas)
+    o_sum = sum(m.n_out for m in metas)
     fi_max = max(m.fan_in for m in metas)
     e_max = max(m.n_entries for m in metas)
 
-    idx_slab = np.zeros((n_l, o_max, fi_max), dtype=np.int32)
+    idx_slab = np.zeros((o_sum, fi_max), dtype=np.int32)
     if pack is None:
         pack = all(int(t.max(initial=0)) < 256 and int(t.min(initial=0)) >= 0
                    for t in tab_np)
     tab_dtype = np.int8 if pack else np.int32
-    table_slab = np.zeros((n_l, o_max, e_max), dtype=tab_dtype)
-    for l, (idx, tab, m) in enumerate(zip(idx_np, tab_np, metas)):
-        idx_slab[l, :m.n_out, :m.fan_in] = idx
-        table_slab[l, :m.n_out, :m.n_entries] = (
+    table_slab = np.zeros((o_sum, e_max), dtype=tab_dtype)
+    row = 0
+    for idx, tab, m in zip(idx_np, tab_np, metas):
+        idx_slab[row:row + m.n_out, :m.fan_in] = idx
+        table_slab[row:row + m.n_out, :m.n_entries] = (
             tab.astype(np.uint8).view(np.int8) if pack else tab)
+        row += m.n_out
     return NetworkSlabs(jnp.asarray(idx_slab), jnp.asarray(table_slab),
                         tuple(metas), bool(pack))
 
@@ -193,14 +199,17 @@ def _layer_step(h: jax.Array, idx: jax.Array, table: jax.Array,
 def _kernel(codes_ref, idx_ref, table_ref, out_ref, *,
             meta: tuple[LayerMeta, ...], packed: bool):
     h = codes_ref[...]                                       # (bb, I0)
-    # Static unroll: each layer reads its (unpadded) slice of the slabs and
-    # hands its output codes straight to the next layer — no HBM in between.
-    for l, m in enumerate(meta):
-        idx = idx_ref[l, :m.n_out, :m.fan_in]
-        table = table_ref[l, :m.n_out, :m.n_entries]
+    # Static unroll: each layer reads its (unpadded) row-slice of the slabs
+    # and hands its output codes straight to the next layer — no HBM in
+    # between.  Row offsets are compile-time constants.
+    row = 0
+    for m in meta:
+        idx = idx_ref[row:row + m.n_out, :m.fan_in]
+        table = table_ref[row:row + m.n_out, :m.n_entries]
         if packed:
             table = table.astype(jnp.int32) & 0xFF
         h = _layer_step(h, idx, table, m.bw_in)
+        row += m.n_out
     out_ref[...] = h
 
 
@@ -209,8 +218,8 @@ def lut_network_pallas(codes: jax.Array, slabs: NetworkSlabs, *,
                        interpret: bool = False) -> jax.Array:
     """Whole sparse stack in one kernel: (batch, I0) -> (batch, O_last)."""
     batch, n_in = codes.shape
-    n_l, o_max, fi_max = slabs.idx_slab.shape
-    e_max = slabs.table_slab.shape[2]
+    o_sum, fi_max = slabs.idx_slab.shape
+    e_max = slabs.table_slab.shape[1]
     block_b = min(block_b, batch)
     grid = (pl.cdiv(batch, block_b),)
 
@@ -219,8 +228,8 @@ def lut_network_pallas(codes: jax.Array, slabs: NetworkSlabs, *,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_b, n_in), lambda b: (b, 0)),
-            pl.BlockSpec((n_l, o_max, fi_max), lambda b: (0, 0, 0)),
-            pl.BlockSpec((n_l, o_max, e_max), lambda b: (0, 0, 0)),
+            pl.BlockSpec((o_sum, fi_max), lambda b: (0, 0)),
+            pl.BlockSpec((o_sum, e_max), lambda b: (0, 0)),
         ],
         out_specs=pl.BlockSpec((block_b, slabs.n_out), lambda b: (b, 0)),
         out_shape=jax.ShapeDtypeStruct((batch, slabs.n_out), jnp.int32),

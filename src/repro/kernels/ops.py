@@ -44,8 +44,8 @@ def lut_lookup(codes: jax.Array, indices: jax.Array, table: jax.Array,
 
 def lut_network(codes: jax.Array, layers, *, fused: bool = True,
                 use_pallas: bool = True, block_b: int = 128,
-                vmem_budget_bytes: int = FUSED_VMEM_BUDGET_BYTES
-                ) -> jax.Array:
+                vmem_budget_bytes: int = FUSED_VMEM_BUDGET_BYTES,
+                optimize_level: int | None = None) -> jax.Array:
     """Whole sparse-stack LUT inference: (B, I0) codes -> (B, O_last) codes.
 
     ``layers`` is a sequence of ``(indices, table, bw_in)`` triples, one per
@@ -56,11 +56,20 @@ def lut_network(codes: jax.Array, layers, *, fused: bool = True,
     ``lut_lookup`` call per layer.  Both paths are bit-exact with the
     ``table_infer.network_table_forward`` reference semantics.
 
+    ``optimize_level`` (0-3) runs the truth-table compiler
+    (``repro.compile``) over the stack first: smaller slabs mean stacks
+    that used to overflow ``vmem_budget_bytes`` can take the fused path,
+    and the output stays bit-identical on every reachable input.
+
     Slabs are rebuilt (host-side numpy) and the kernel re-traced on every
     call — fine for verification and batch scoring; a throughput serving
     loop should instead ``build_network_slabs`` once and jit a closure
     over ``lut_network_pallas`` (see benchmarks/kernel_bench.py).
     """
+    if optimize_level is not None:
+        from repro.compile import optimize_triples
+        layers = optimize_triples(layers, optimize_level,
+                                  in_features=codes.shape[-1])
     if not use_pallas:
         c = codes
         for indices, table, bw_in in layers:

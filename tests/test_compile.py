@@ -1,0 +1,351 @@
+"""Truth-table compiler: pass-by-pass units + end-to-end bit-exactness.
+
+The pipeline's contract: ``compile.optimize`` output computes the same
+function as the raw netlist on every reachable input — per-layer jnp,
+fused Pallas kernel, and the Verilog interpreter all included.  Units pin
+each pass's mechanism on hand-built tables with known structure; the
+hypothesis sweep proves the contract on generated LogicNets end-to-end.
+"""
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st  # real when installed
+
+from repro import compile as C
+from repro.core import logicnet as LN
+from repro.core.lut_cost import netlist_lut_cost
+from repro.core.netlist import build_netlist
+from repro.core.table_infer import network_table_forward
+from repro.core.truth_table import LayerTruthTable
+from repro.core.verilog import evaluate_verilog, generate_verilog
+from repro.kernels.ops import lut_network
+
+
+def _tt(table, indices, bw_in, bw_out):
+    return LayerTruthTable(np.asarray(table, np.int32),
+                           np.asarray(indices, np.int32), bw_in, bw_out)
+
+
+def _all_input_codes(n_features, bw):
+    words = np.arange((2 ** bw) ** n_features)
+    return np.stack([(words >> (bw * k)) & (2 ** bw - 1)
+                     for k in range(n_features)], axis=1).astype(np.int32)
+
+
+def _assert_same_function(raw_tables, res, n_features, bw):
+    """Exhaustive equality over the full (reachable) input domain."""
+    codes_in = jnp.asarray(_all_input_codes(n_features, bw))
+    want = np.asarray(network_table_forward(raw_tables, codes_in))
+    got = np.asarray(network_table_forward(res.tables, codes_in))
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(
+        C.forward_codes(res.cnet, np.asarray(codes_in)), want)
+
+
+# ---------------------------------------------------------------------------
+# pass units on hand-built stacks
+# ---------------------------------------------------------------------------
+
+def test_level0_is_identity():
+    t0 = _tt([[0, 1, 1, 0], [1, 1, 0, 0]], [[0], [1]], 2, 1)
+    res = C.optimize([t0], level=0, in_features=2)
+    np.testing.assert_array_equal(res.tables[0].table, t0.table)
+    np.testing.assert_array_equal(res.tables[0].indices, t0.indices)
+    assert res.stats.rounds == 0
+    assert res.stats.table_bytes_after == res.stats.table_bytes_before
+    # analysis still runs: reachability stats are reported, nothing rewritten
+    assert [p.name for p in res.stats.passes] == ["reachability"]
+    assert "reachable_code_counts" in res.stats.passes[0].detail
+    assert all(n.reachable is None
+               for lay in res.cnet.layers for n in lay.neurons)
+
+
+def test_reachability_marks_and_canonicalizes_dont_cares():
+    # layer 0 (1-bit codes): neuron emits only code 1 (constant)
+    t0 = _tt([[1, 1], [0, 1]], [[0], [1]], 1, 1)
+    # layer 1 reads both features; entries where feature-0's code is 0 are
+    # unreachable don't-cares
+    t1 = _tt([[7, 1, 2, 1]], [[0, 1]], 1, 3)
+    res = C.optimize([t0, t1], level=1, in_features=2)
+    assert res.stats.dont_care_entries == 2      # entries 0 and 2 of t1
+    n = res.cnet.layers[1].neurons[0]
+    # canonicalized: unreachable column (d0=0) copies the reachable d0=1
+    np.testing.assert_array_equal(n.table, [1, 1, 1, 1])
+    np.testing.assert_array_equal(n.reachable, [False, True, False, True])
+    _assert_same_function([t0, t1], res, 2, 1)
+
+
+def test_cse_dedups_identical_neurons():
+    # neurons 0 and 2 are identical (same fan-in wires, same table)
+    t0 = _tt([[0, 1, 1, 0], [1, 0, 0, 1], [0, 1, 1, 0]],
+             [[0, 1], [0, 1], [0, 1]], 1, 1)
+    t1 = _tt([[0, 1, 1, 1], [1, 0, 0, 1]], [[0, 2], [1, 2]], 1, 1)
+    res = C.optimize([t0, t1], level=2, in_features=2)
+    merged = sum(p.detail.get("merged", 0) for p in res.stats.passes)
+    assert merged == 1
+    assert res.cnet.layers[0].out_features == 2  # duplicate DCE'd away
+    assert res.stats.neurons_after < res.stats.neurons_before
+    _assert_same_function([t0, t1], res, 2, 1)
+
+
+def test_dead_input_pruning_shrinks_table():
+    # neuron ignores element 1 entirely: table depends only on element 0
+    tab = [0, 1, 0, 1,   0, 1, 0, 1,   0, 1, 0, 1,   0, 1, 0, 1]
+    t0 = _tt([tab], [[0, 1]], 2, 1)
+    res = C.optimize([t0], level=2, in_features=2)
+    pruned = sum(p.detail.get("pruned_elements", 0)
+                 for p in res.stats.passes)
+    assert pruned == 1
+    n = res.cnet.layers[0].neurons[0]
+    assert n.fan_in == 1 and n.n_entries == 4   # 16 -> 4: 2x per bit, 2 bits
+    np.testing.assert_array_equal(n.indices, [0])
+    _assert_same_function([t0], res, 2, 2)
+
+
+def test_constant_producer_folds_and_dies():
+    # layer-0 neuron 1 is constant; its consumer's element collapses and
+    # the producer is left unconsumed -> eliminated, all in one round
+    t0 = _tt([[0, 1, 1, 0], [1, 1, 1, 1]], [[0, 1], [0, 1]], 1, 1)
+    t1 = _tt([[0, 0, 1, 1], [1, 0, 1, 0]], [[0, 1], [0, 1]], 1, 1)
+    res = C.optimize([t0, t1], level=2, in_features=2)
+    consts = max(p.detail.get("constants", 0) for p in res.stats.passes)
+    assert consts >= 1
+    assert res.cnet.layers[0].out_features == 1
+    for n in res.cnet.layers[1].neurons:
+        assert n.fan_in == 1
+        np.testing.assert_array_equal(n.indices, [0])
+    _assert_same_function([t0, t1], res, 2, 1)
+
+
+def test_dead_neuron_chain_eliminated_backwards():
+    # layer-1 neuron 1 is never consumed by layer 2; removing it leaves
+    # layer-0 neuron 1 (its only supplier) dead too — one backward sweep
+    t0 = _tt([[0, 1], [1, 0]], [[0], [1]], 1, 1)
+    t1 = _tt([[0, 1], [1, 0]], [[0], [1]], 1, 1)
+    t2 = _tt([[0, 1]], [[0]], 1, 1)
+    res = C.optimize([t0, t1, t2], level=1, in_features=2)
+    assert [lay.out_features for lay in res.cnet.layers] == [1, 1, 1]
+    removed = sum(p.detail.get("removed_neurons", 0)
+                  for p in res.stats.passes)
+    assert removed == 2
+    _assert_same_function([t0, t1, t2], res, 2, 1)
+
+
+def test_final_layer_arity_is_preserved():
+    # duplicate + constant neurons in the FINAL layer must all survive:
+    # the output bus is the contract
+    t0 = _tt([[0, 1, 1, 0], [0, 1, 1, 0], [3, 3, 3, 3]],
+             [[0, 1], [0, 1], [0, 1]], 1, 2)
+    res = C.optimize([t0], level=3, in_features=2)
+    assert res.cnet.layers[-1].out_features == 3
+    _assert_same_function([t0], res, 2, 1)
+
+
+def test_level3_fixpoint_cascades_constants():
+    # constant at layer 0 -> after round 1 its consumer becomes constant
+    # too -> round 2 collapses the next layer; level 2 (single round)
+    # cannot finish the chain
+    t0 = _tt([[1, 1], [0, 1]], [[0], [1]], 1, 1)
+    t1 = _tt([[0, 0, 0, 1], [0, 1, 1, 1]], [[0, 1], [0, 1]], 1, 1)
+    t2 = _tt([[0, 1, 1, 0]], [[0, 1]], 1, 1)
+    res3 = C.optimize([t0, t1, t2], level=3, in_features=2)
+    assert res3.stats.rounds >= 2
+    _assert_same_function([t0, t1, t2], res3, 2, 1)
+    res2 = C.optimize([t0, t1, t2], level=2, in_features=2)
+    assert res2.stats.table_bytes_after >= res3.stats.table_bytes_after
+
+
+def test_invalid_level_rejected():
+    t0 = _tt([[0, 1]], [[0]], 1, 1)
+    with pytest.raises(ValueError, match="level"):
+        C.optimize([t0], level=4)
+
+
+# ---------------------------------------------------------------------------
+# lowering targets
+# ---------------------------------------------------------------------------
+
+def test_lowered_tables_are_uniform_and_padded():
+    # one neuron prunes to fan_in 1, the other keeps 2: the lowered layer
+    # pads to fan_in 2 and tiles the pruned neuron's table
+    tab_prunable = [0, 1] * 2    # ignores element 1
+    tab_full = [0, 0, 0, 1]
+    t0 = _tt([tab_prunable, tab_full], [[0, 1], [0, 1]], 1, 1)
+    res = C.optimize([t0], level=2, in_features=2)
+    tt = res.tables[0]
+    assert tt.indices.shape == (2, 2)
+    assert tt.n_entries == 4 == 1 << (tt.fan_in * tt.bw_in)
+    _assert_same_function([t0], res, 2, 1)
+
+
+def test_netlist_roundtrip_through_compiler():
+    # optimize() accepts a Netlist (with layer_bw_in metadata) directly
+    t0 = _tt([[0, 1, 1, 0], [0, 1, 1, 0]], [[0, 1], [0, 1]], 1, 1)
+    t1 = _tt([[0, 1, 1, 1]], [[0, 1]], 1, 1)
+    nl = build_netlist([t0, t1], in_features=2)
+    res = C.optimize(nl, level=2)
+    assert res.stats.neurons_after <= res.stats.neurons_before
+    _assert_same_function([t0, t1], res, 2, 1)
+    bad = build_netlist([t0, t1], in_features=2)
+    bad.layer_bw_in = None
+    with pytest.raises(ValueError, match="layer_bw_in"):
+        C.optimize(bad, level=1)
+
+
+def test_netlist_with_misgrouped_bits_rejected():
+    """from_netlist must reject bit groups that straddle features."""
+    t0 = _tt([[0, 1, 2, 3] * 4], [[0, 1]], 2, 2)
+    nl = build_netlist([t0], in_features=2)
+    # bits [2, 5] at bw=2 mixes feature-1 bit 0 with feature-2 bit 1
+    nl.layers[0][0].input_bits = [0, 1, 2, 5]
+    with pytest.raises(ValueError, match="feature groups"):
+        C.optimize(nl, level=1)
+
+
+def test_optimized_netlist_bytes_and_cost_reported():
+    t0 = _tt([[0, 1, 1, 0], [0, 1, 1, 0], [1, 1, 1, 1]],
+             [[0, 1], [0, 1], [0, 1]], 1, 1)
+    t1 = _tt([[0, 1, 1, 1]], [[0, 1]], 1, 1)
+    res = C.optimize([t0, t1], level=2, in_features=2)
+    s = res.stats
+    assert s.table_bytes_after < s.table_bytes_before
+    assert s.lut_cost_after <= s.lut_cost_before
+    assert s.table_bytes_after == res.cnet.table_bytes()
+    assert s.table_bytes_after == res.netlist.table_bytes()
+    assert s.lut_cost_after == netlist_lut_cost(res.netlist)
+    d = s.as_dict()
+    assert d["passes"] and all("seconds" in p for p in d["passes"])
+    assert "->" in C.summarize(s)
+
+
+def test_optimize_triples_wire_format():
+    rng = np.random.default_rng(0)
+    idx = np.stack([np.sort(rng.choice(4, 2, replace=False))
+                    for _ in range(4)]).astype(np.int32)
+    tab = rng.integers(0, 2, (4, 16), dtype=np.int32)
+    layers = [(idx, tab, 2)]
+    opt = C.optimize_triples(layers, level=2, in_features=4)
+    codes_in = jnp.asarray(rng.integers(0, 4, (16, 4), dtype=np.int32))
+    want = np.asarray(lut_network(codes_in, layers, fused=False))
+    got = np.asarray(lut_network(codes_in, opt, fused=False))
+    np.testing.assert_array_equal(got, want)
+    got = np.asarray(lut_network(codes_in, layers, optimize_level=2))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end on generated LogicNets (all three execution paths)
+# ---------------------------------------------------------------------------
+
+def _trained_toy(seed=0, hidden=(6, 5), fan_in=2, bw=2, in_features=6,
+                 n_classes=3):
+    cfg = LN.LogicNetCfg(in_features=in_features, n_classes=n_classes,
+                         hidden=hidden, fan_in=fan_in, bw=bw,
+                         final_dense=False, fan_in_fc=fan_in, bw_fc=bw)
+    key = jax.random.PRNGKey(seed)
+    model = LN.init(cfg, key, mask_seed=seed)
+    x = jax.random.uniform(key, (64, in_features), minval=-1.0, maxval=3.0)
+    _, model = LN.forward(cfg, model, x, train=True)
+    return cfg, model, x
+
+
+def _check_all_paths(cfg, tables, res, n_words=40, seed=0):
+    """Raw vs optimized: per-layer jnp, fused Pallas, Verilog interpreter."""
+    rng = np.random.default_rng(seed)
+    bw = cfg.bw
+    codes_in = jnp.asarray(rng.integers(0, 2 ** bw,
+                                        (17, cfg.in_features),
+                                        dtype=np.int32))
+    want = np.asarray(network_table_forward(tables, codes_in))
+    got_pl = np.asarray(network_table_forward(res.tables, codes_in))
+    np.testing.assert_array_equal(got_pl, want)
+    got_fused = np.asarray(network_table_forward(res.tables, codes_in,
+                                                 fused=True))
+    np.testing.assert_array_equal(got_fused, want)
+
+    files = generate_verilog(res.netlist)
+    n_layers = 1 + max(int(m.group(1)) for m in
+                       (re.match(r"LUTLayer(\d+)\.v$", f) for f in files)
+                       if m)
+    bw_out = tables[-1].bw_out
+    o_last = tables[-1].out_features
+    for _ in range(n_words):
+        word = int(rng.integers(0, 2 ** (bw * cfg.in_features)))
+        digits = [(word >> (bw * f)) & (2 ** bw - 1)
+                  for f in range(cfg.in_features)]
+        expect = np.asarray(network_table_forward(
+            tables, jnp.asarray([digits], jnp.int32)))[0]
+        out_word = evaluate_verilog(files, word, n_layers=n_layers)
+        got = [(out_word >> (bw_out * j)) & (2 ** bw_out - 1)
+               for j in range(o_last)]
+        assert got == [int(v) for v in expect], f"word={word}"
+
+
+@pytest.mark.parametrize("level", [1, 2, 3])
+def test_generated_logicnet_all_paths_bit_exact(level):
+    cfg, model, _ = _trained_toy(seed=11)
+    tables = LN.generate_tables(cfg, model)
+    res = C.optimize(tables, level, in_features=cfg.in_features)
+    _check_all_paths(cfg, tables, res)
+
+
+def test_verify_tables_with_optimize_level():
+    cfg, model, x = _trained_toy(seed=5)
+    tables = LN.generate_tables(cfg, model)
+    for fused in (False, True):
+        f_codes, t_codes = LN.verify_tables(cfg, model, tables, x,
+                                            fused=fused, optimize_level=2)
+        np.testing.assert_array_equal(np.asarray(f_codes),
+                                      np.asarray(t_codes))
+
+
+def test_model_a_stack_shrinks_measurably():
+    """The acceptance-criteria case: fpga4hep model A's packed tables and
+    fused slab both shrink, and the result stays bit-exact (sampled)."""
+    from repro.configs import fpga4hep
+    from repro.kernels.lut_network import estimate_slab_bytes
+
+    cfg = fpga4hep.model_a()
+    model = LN.init(cfg, jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (256, cfg.in_features),
+                           minval=-1, maxval=3)
+    _, model = LN.forward(cfg, model, x, train=True)
+    tables = LN.generate_tables(cfg, model)
+    res = C.optimize(tables, level=2, in_features=cfg.in_features)
+    assert res.stats.table_bytes_after < res.stats.table_bytes_before
+    raw_slab, _, _ = estimate_slab_bytes(
+        [(tt.indices, tt.table, tt.bw_in) for tt in tables])
+    opt_slab, _, _ = estimate_slab_bytes(
+        [(tt.indices, tt.table, tt.bw_in) for tt in res.tables])
+    assert opt_slab < raw_slab
+    codes_in = jnp.asarray(np.random.default_rng(0).integers(
+        0, 2 ** cfg.bw, (64, cfg.in_features), dtype=np.int32))
+    want = np.asarray(network_table_forward(tables, codes_in))
+    got = np.asarray(network_table_forward(res.tables, codes_in,
+                                           fused=True))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep: the full round-trip contract (skipped w/o hypothesis)
+# ---------------------------------------------------------------------------
+
+@given(data=st.data())
+@settings(max_examples=12, deadline=None)
+def test_optimize_round_trip_bit_exact_hypothesis(data):
+    seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+    bw = data.draw(st.integers(1, 2), label="bw")
+    n_hidden = data.draw(st.integers(1, 2), label="n_hidden")
+    hidden = tuple(data.draw(st.integers(3, 7), label=f"h{i}")
+                   for i in range(n_hidden))
+    level = data.draw(st.integers(1, 3), label="level")
+    cfg, model, _ = _trained_toy(seed=seed, hidden=hidden, fan_in=2,
+                                 bw=bw, in_features=5, n_classes=3)
+    tables = LN.generate_tables(cfg, model)
+    res = C.optimize(tables, level, in_features=cfg.in_features)
+    _check_all_paths(cfg, tables, res, n_words=12, seed=seed)

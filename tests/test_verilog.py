@@ -37,7 +37,9 @@ def test_listing_structure():
                        r"M0\[\d+\], M0\[\d+\]\};", layer0)
     assert len(wires) == 4
     lut = files["LUT_L0_N0.v"]
-    assert "case (M0)" in lut and lut.count(": M1 =") == 2 ** 3
+    # all 2^3 entry arms plus the explicit default: arm (synthesis-safety)
+    assert "case (M0)" in lut and lut.count(": M1 =") == 2 ** 3 + 1
+    assert lut.count("default: M1 =") == 1
     assert "endmodule" in lut
 
 
@@ -81,6 +83,65 @@ def test_multibit_verilog_roundtrip():
                & (2 ** tables[-1].bw_out - 1)
                for j in range(tables[-1].out_features)]
         assert got == [int(v) for v in expect]
+
+
+def test_default_arm_matches_interpreter_semantics():
+    """Arms folded into the default: arm evaluate identically to synthesis.
+
+    A reachability mask marks half the entries don't-care; the module must
+    emit arms only where needed, and evaluate_verilog must return the
+    default value for every omitted entry — the exact case-statement
+    semantics a synthesis tool implements (no divergence on don't-cares).
+    """
+    from repro.core.verilog import _parse_tables, neuron_module
+
+    table = np.array([5, 2, 2, 2, 7, 2, 2, 1], dtype=np.int64)
+    reachable = np.array([1, 1, 0, 1, 1, 0, 1, 0], dtype=bool)
+    text = neuron_module("LUT_L0_N0", 3, 3, table, reachable)
+    # default is the most common reachable value (2); arms only for
+    # reachable entries that differ from it
+    assert "default: M1 = 3'd2;" in text
+    assert text.count(": M1 =") == 3  # entries 0, 4 + default
+    parsed = _parse_tables({"LUT_L0_N0.v": text})["LUT_L0_N0"]
+    assert parsed.shape == (8,)
+    # reachable entries keep their exact value...
+    assert [parsed[i] for i in np.flatnonzero(reachable)] == [5, 2, 2, 7, 2]
+    # ...and don't-cares all collapse to the default
+    assert [parsed[i] for i in np.flatnonzero(~reachable)] == [2, 2, 2]
+
+
+def test_full_case_still_emits_default():
+    """Even a complete case gets a default: arm (no latch inference)."""
+    from repro.core.verilog import neuron_module
+
+    text = neuron_module("LUT_L0_N1", 2, 2, np.array([0, 1, 2, 3]))
+    assert text.count(": M1 =") == 4 + 1
+    assert "default: M1 = 2'd0;" in text
+
+
+def test_optimized_verilog_matches_raw_tables():
+    """to_verilog(optimize_level=2): fewer modules, same function."""
+    cfg, model = _toy(seed=4)
+    tables = LN.generate_tables(cfg, model)
+    raw = LN.to_verilog(cfg, model)
+    opt = LN.to_verilog(cfg, model, optimize_level=2)
+    n_raw = sum(1 for f in raw if f.startswith("LUT_L"))
+    n_opt = sum(1 for f in opt if f.startswith("LUT_L"))
+    assert n_opt <= n_raw
+    bw = cfg.bw
+    n_layers_opt = 1 + max(int(m.group(1)) for m in
+                           (re.match(r"LUTLayer(\d+)\.v$", f) for f in opt)
+                           if m)
+    for word in range(2 ** (bw * cfg.in_features)):
+        digits = [(word >> (bw * f)) & (2 ** bw - 1)
+                  for f in range(cfg.in_features)]
+        expect = np.asarray(network_table_forward(
+            tables, jnp.asarray([digits], jnp.int32)))[0]
+        out_word = evaluate_verilog(opt, word, n_layers=n_layers_opt)
+        got = [(out_word >> (tables[-1].bw_out * j))
+               & (2 ** tables[-1].bw_out - 1)
+               for j in range(tables[-1].out_features)]
+        assert got == [int(v) for v in expect], f"word={word}"
 
 
 def test_pipeline_variant_has_registers():
