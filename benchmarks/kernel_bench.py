@@ -13,12 +13,30 @@ Also a CLI (used by the CI bench-smoke step)::
 ``--smoke`` restricts to the fused-vs-per-layer LUT-network comparison on
 the fpga4hep topologies at reduced iteration counts, emitting the
 ``fused_speedup`` field the perf trajectory tracks.
+
+Perf-regression gate (used by CI so a compiler or kernel regression cannot
+merge silently)::
+
+    # compare this run against the committed baseline; exit 1 on regression
+    python -m benchmarks.kernel_bench --smoke --json out.json \
+        --baseline benchmarks/baselines/BENCH_baseline.json
+    # refresh the committed baseline after an intentional perf change
+    python -m benchmarks.kernel_bench --update-baseline
+
+Gated quantities: ``fused_speedup`` on fpga4hep model A (with a 25%
+interpret-mode-noise tolerance), the compile section's
+``slab_reduction_pct`` and ``table_bytes_after`` at level 2 and level 3
+(near-deterministic; small tolerances for cross-version float drift).
+``BENCH_*.json`` at the repo root is gitignored, so the committed baseline
+lives under ``benchmarks/baselines/``.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
 
 import jax
@@ -28,13 +46,14 @@ import numpy as np
 from repro import compile as rcompile
 from repro.kernels import ref
 from repro.kernels.lut_lookup import lut_lookup_pallas
-from repro.kernels.lut_network import (build_network_slabs,
-                                       estimate_slab_bytes,
-                                       lut_network_pallas)
-from repro.kernels.ops import (FUSED_VMEM_BUDGET_BYTES, flash_attention,
-                               lut_lookup, masked_matmul)
+from repro.kernels.lut_network import build_network_slabs, lut_network_pallas
+from repro.kernels.ops import (flash_attention, fused_plan, lut_lookup,
+                               masked_matmul)
 
 Row = tuple[str, float, str]
+
+BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "baselines", "BENCH_baseline.json")
 
 
 def _bench(fn, *args, iters=20, warmup=3) -> float:
@@ -123,19 +142,17 @@ def _slab_report(layers, opt=None) -> dict:
     """
     if opt is None:
         opt = rcompile.optimize_triples(layers, level=2)
-    raw_bytes, _, raw_f32 = estimate_slab_bytes(layers)
-    opt_bytes, _, opt_f32 = estimate_slab_bytes(opt)
-    # eligibility mirrors ops.lut_network's actual gate: slabs under the
-    # VMEM budget AND codes exact in the kernel's f32 one-hot gathers
+    # eligibility IS ops.lut_network's actual gate (fused_plan is the
+    # single source of truth for the VMEM-budget + f32-exactness decision)
+    raw_plan = fused_plan(layers)
+    opt_plan = fused_plan(opt)
     return {
-        "slab_bytes_raw": raw_bytes,
-        "slab_bytes_optimized": opt_bytes,
-        "slab_reduction_pct": 100.0 * (1.0 - opt_bytes / raw_bytes),
-        "fused_eligible_raw": (raw_f32
-                               and raw_bytes <= FUSED_VMEM_BUDGET_BYTES),
-        "fused_eligible_optimized": (opt_f32
-                                     and opt_bytes
-                                     <= FUSED_VMEM_BUDGET_BYTES),
+        "slab_bytes_raw": raw_plan.slab_bytes,
+        "slab_bytes_optimized": opt_plan.slab_bytes,
+        "slab_reduction_pct":
+            100.0 * (1.0 - opt_plan.slab_bytes / raw_plan.slab_bytes),
+        "fused_eligible_raw": raw_plan.fused,
+        "fused_eligible_optimized": opt_plan.fused,
     }
 
 
@@ -172,19 +189,46 @@ def lut_network_rows(smoke: bool = False) -> tuple[list[Row], dict]:
 
         np.testing.assert_array_equal(np.asarray(fused(codes)),
                                       np.asarray(per(codes)))
-        us_per = _bench(per, codes, iters=iters, warmup=warmup)
-        us_fused = _bench(fused, codes, iters=iters, warmup=warmup)
-        speedup = us_per / us_fused
+        # the smoke-mode speedup feeds the CI regression gate, so take the
+        # median of 3 measurement pairs — one noisy-neighbor window on a
+        # shared runner then cannot move the gated ratio
+        reps = []
+        for _ in range(3 if smoke else 1):
+            up = _bench(per, codes, iters=iters, warmup=warmup)
+            uf = _bench(fused, codes, iters=iters, warmup=warmup)
+            reps.append((up / uf, up, uf))
+        reps.sort()
+        speedup, us_per, us_fused = reps[len(reps) // 2]
         n_layers = len(layers)
         rows.append((f"kernel/lut_network_perlayer[{name}]", us_per,
                      f"batch={batch} layers={n_layers}"))
         rows.append((f"kernel/lut_network_fused[{name}]", us_fused,
                      f"speedup={speedup:.2f}x vs per-layer"))
+        # diagnose a sub-1x fused result so the regression gate (and a
+        # human reading the JSON) can tell "fused fell back / was
+        # ineligible" apart from "fused executed and got slower"
+        plan = fused_plan(layers)
+        reason = None
+        if speedup < 1.0:
+            if not plan.fused:
+                reason = f"fused ineligible, would fall back: {plan.reason}"
+            elif interp:
+                reason = ("fused executed but slower under the Pallas "
+                          "interpreter (two-level one-hot gather costs "
+                          "more per element in interpret mode than the "
+                          "per-layer compare/select; TPU timings are "
+                          "authoritative)")
+            else:
+                reason = "fused executed but slower on this backend"
         extras["cases"][name] = {
             "layers": n_layers, "batch": batch, "bw": bw, "fan_in": fan_in,
             "us_per_layer_path": us_per, "us_fused": us_fused,
             "fused_speedup": speedup,
             "slab_bytes": slabs.vmem_bytes(), "packed": slabs.packed,
+            # fused_plan carries the slab-vs-VMEM-budget breakdown
+            # (slab_bytes, vmem_budget_bytes, headroom_bytes, reason)
+            "fused_plan": plan.as_dict(),
+            "fused_slower_reason": reason,
             **_slab_report(layers),
         }
         if name == "fpga4hep_modelA":
@@ -200,7 +244,10 @@ def compile_stats_case() -> dict:
     the compiler's real effect shows on tables generated from an actual
     quantized model, so this is the stack the acceptance numbers and the
     CI compile-stats artifact track: raw vs optimized packed table bytes,
-    fused-slab bytes, and the per-pass reduction statistics.
+    fused-slab bytes, and the per-pass reduction statistics.  The
+    top-level fields are the level-2 (default) run; the ``level3`` section
+    adds the cross-layer re-encoding pass (per-feature bus narrowing) with
+    its ``features_recoded`` / ``bits_saved`` statistics.
     """
     import jax as _jax
     from repro.configs import fpga4hep
@@ -222,7 +269,115 @@ def compile_stats_case() -> dict:
         "stats": res.stats.as_dict(),
         "summary": rcompile.summarize(res.stats),
     }
+    res3 = rcompile.optimize(tables, level=3, in_features=cfg.in_features)
+    opt3_triples = [(tt.indices, tt.table, tt.bw_in) for tt in res3.tables]
+    report["level3"] = {
+        "level": 3,
+        **_slab_report(triples, opt=opt3_triples),
+        "stats": res3.stats.as_dict(),
+        "summary": rcompile.summarize(res3.stats),
+    }
     return report
+
+
+# ---------------------------------------------------------------------------
+# Perf-regression gate (CI bench-smoke): bench JSON vs committed baseline
+# ---------------------------------------------------------------------------
+
+def baseline_from_payload(payload: dict) -> dict:
+    """Extract exactly the gated quantities from a bench JSON payload."""
+    comp = payload["compile"]
+    return {
+        "benchmark": "kernel_bench_smoke_baseline",
+        "mode": payload.get("mode"),
+        "backend": payload.get("backend"),
+        "fused_speedup": payload["fused_speedup"],
+        "compile": {
+            "slab_reduction_pct": comp["slab_reduction_pct"],
+            "table_bytes_after": comp["stats"]["table_bytes_after"],
+            "level3": {
+                "slab_reduction_pct": comp["level3"]["slab_reduction_pct"],
+                "table_bytes_after":
+                    comp["level3"]["stats"]["table_bytes_after"],
+                # round-count independent (telescoping), unlike the
+                # features_recoded event count — see CompileStats
+                "bits_saved": comp["level3"]["stats"]["bits_saved"],
+            },
+        },
+    }
+
+
+def check_against_baseline(payload: dict, baseline: dict, *,
+                           speedup_tolerance: float = 0.25,
+                           bytes_tolerance: float = 0.05,
+                           pct_tolerance: float = 2.0,
+                           recode_tolerance: float = 0.2) -> list[str]:
+    """Compare a bench payload against the committed baseline.
+
+    Returns a list of human-readable regression descriptions (empty =
+    pass).  ``fused_speedup`` is a timing ratio measured in interpret mode
+    on shared runners, so it gets a wide (default 25%) tolerance on top of
+    the bench's own median-of-3; the compile quantities are
+    near-deterministic (same seeds, same tables) and only get small
+    tolerances for cross-version float drift in table generation.
+    """
+    failures: list[str] = []
+
+    # protocol guard: a full-mode or TPU run is not comparable with the
+    # smoke/cpu baseline — refuse rather than gate apples against oranges
+    for key in ("mode", "backend"):
+        b, p = baseline.get(key), payload.get(key)
+        if b is not None and p is not None and b != p:
+            failures.append(
+                f"{key} mismatch: this run has {key}={p!r} but the "
+                f"baseline was recorded with {key}={b!r} — rerun with "
+                "matching settings or refresh via --update-baseline")
+    if failures:
+        return failures
+
+    base_s = float(baseline["fused_speedup"])
+    got_s = float(payload["fused_speedup"])
+    floor = base_s * (1.0 - speedup_tolerance)
+    if got_s < floor:
+        failures.append(
+            f"fused_speedup {got_s:.2f}x < {floor:.2f}x floor "
+            f"(baseline {base_s:.2f}x minus {speedup_tolerance:.0%} "
+            "interpret-mode tolerance, fpga4hep model A)")
+
+    # (label, baseline section, payload section) — the payload nests the
+    # per-level scalars one level deeper ("stats") than the flat baseline
+    levels = [("level-2", baseline["compile"], payload["compile"]),
+              ("level-3", baseline["compile"]["level3"],
+               payload["compile"]["level3"])]
+    for label, base, got in levels:
+        b = float(base["slab_reduction_pct"])
+        p = float(got["slab_reduction_pct"])
+        if p < b - pct_tolerance:
+            failures.append(
+                f"compile {label} slab_reduction_pct {p:.1f}% < "
+                f"{b - pct_tolerance:.1f}% floor (baseline {b:.1f}% minus "
+                f"{pct_tolerance} pp tolerance)")
+        b = float(base["table_bytes_after"])
+        p = float(got["stats"]["table_bytes_after"])
+        ceil = b * (1.0 + bytes_tolerance)
+        if p > ceil:
+            failures.append(
+                f"compile {label} table_bytes_after {p:.0f} > {ceil:.0f} "
+                f"ceiling (baseline {b:.0f} plus {bytes_tolerance:.0%} "
+                "tolerance)")
+    # the re-encoding pass must keep narrowing buses; bits_saved telescopes
+    # across fixpoint rounds so round-count refactors cannot move it
+    # (magnitude regressions also surface via table_bytes_after above)
+    b_rec = baseline["compile"]["level3"].get("bits_saved")
+    if b_rec is not None:
+        p_rec = int(payload["compile"]["level3"]["stats"]["bits_saved"])
+        floor = int(int(b_rec) * (1.0 - recode_tolerance))
+        if p_rec < floor:
+            failures.append(
+                f"compile level-3 bits_saved {p_rec} < {floor} floor "
+                f"(baseline {b_rec} minus {recode_tolerance:.0%} "
+                "tolerance)")
+    return failures
 
 
 def main() -> None:
@@ -230,7 +385,16 @@ def main() -> None:
     ap.add_argument("--json", default=None, help="write results to this path")
     ap.add_argument("--smoke", action="store_true",
                     help="fused-vs-per-layer comparison only, few iters")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="compare against this committed baseline JSON and "
+                    "exit 1 on a perf/compile regression (the CI gate)")
+    ap.add_argument("--update-baseline", nargs="?", const=BASELINE_PATH,
+                    default=None, metavar="PATH",
+                    help="run the smoke bench and (re)write the committed "
+                    f"baseline (default: {BASELINE_PATH})")
     args = ap.parse_args()
+    if args.update_baseline:
+        args.smoke = True  # baselines are recorded in the mode CI runs
 
     if args.json:  # fail fast on an unwritable path, not after the bench
         with open(args.json, "a"):
@@ -251,19 +415,39 @@ def main() -> None:
         print(f"# compile slab bytes: {comp['slab_bytes_raw']} -> "
               f"{comp['slab_bytes_optimized']} "
               f"(-{comp['slab_reduction_pct']:.1f}%)")
+        print(f"# compile level3: {comp['level3']['summary']}")
 
+    payload = {
+        "benchmark": "kernel_bench",
+        "mode": "smoke" if args.smoke else "full",
+        "backend": jax.default_backend(),
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+        **extras,
+    }
     if args.json:
-        payload = {
-            "benchmark": "kernel_bench",
-            "mode": "smoke" if args.smoke else "full",
-            "backend": jax.default_backend(),
-            "rows": [{"name": n, "us_per_call": us, "derived": d}
-                     for n, us, d in rows],
-            **extras,
-        }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {args.json}")
+
+    if args.update_baseline:
+        base_dir = os.path.dirname(args.update_baseline)
+        if base_dir:
+            os.makedirs(base_dir, exist_ok=True)
+        with open(args.update_baseline, "w") as f:
+            json.dump(baseline_from_payload(payload), f, indent=2)
+            f.write("\n")
+        print(f"# wrote baseline {args.update_baseline}")
+
+    if args.baseline:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        failures = check_against_baseline(payload, baseline)
+        if failures:
+            for msg in failures:
+                print(f"# REGRESSION: {msg}")
+            sys.exit(1)
+        print(f"# baseline check passed vs {args.baseline}")
 
 
 if __name__ == "__main__":

@@ -15,18 +15,21 @@ Verilog.
     res.stats     # per-pass reduction statistics
 
 Passes: reachable-code analysis + don't-care canonicalization, neuron CSE,
-dead-input pruning, constant folding / dead-neuron elimination.  See
-pipeline.py for the level ladder.
+dead-input pruning, cross-layer code re-encoding (level 3: a bus feature
+carrying k < 2^bw distinct codes is narrowed to ceil(log2 k) bits with
+coordinated producer/consumer rewrites), constant folding / dead-neuron
+elimination.  See pipeline.py for the level ladder.
 """
 
 from repro.compile.ir import CLayer, CNet, CNeuron, forward_codes
 from repro.compile.pipeline import (CompileStats, OptimizeResult, PassStats,
                                     optimize, optimize_tables,
                                     optimize_triples, raw_stats, summarize)
+from repro.compile.reencode import reencode
 
 __all__ = [
     "CLayer", "CNet", "CNeuron", "forward_codes",
     "CompileStats", "OptimizeResult", "PassStats",
     "optimize", "optimize_tables", "optimize_triples", "raw_stats",
-    "summarize",
+    "reencode", "summarize",
 ]

@@ -32,6 +32,9 @@ def cse(net: CNet) -> dict:
     the first representative, which leaves the duplicate unconsumed for the
     DCE pass to collect.  The final layer is the network's output bus, so
     its neurons are never merged (arity and order are the output contract).
+    Re-encoded neurons carry their own output width, so the width is part
+    of the merge key: redirecting a consumer must not change the encoding
+    of the feature it reads.
     """
     merged = 0
     for li in range(len(net.layers) - 1):
@@ -40,7 +43,8 @@ def cse(net: CNet) -> dict:
         remap = np.arange(lay.out_features, dtype=np.int32)
         merged_here = 0
         for j, n in enumerate(lay.neurons):
-            key = n.indices.tobytes() + b"|" + n.table.tobytes()
+            key = (n.indices.tobytes() + b"|" + n.table.tobytes()
+                   + b"|" + str(lay.out_width_of(j)).encode())
             if key in seen:
                 remap[j] = seen[key]
                 merged_here += 1
@@ -69,17 +73,18 @@ def _reachable_feat_codes(net: CNet) -> list[list[np.ndarray]]:
     return per_layer
 
 
-def _try_prune_element(n: CNeuron, k: int, bw_in: int,
+def _try_prune_element(n: CNeuron, k: int, elem_widths: np.ndarray,
                        reach: np.ndarray) -> bool:
     """Remove element k if the table is independent of it across ``reach``.
 
     The table is viewed as an array over digits (element 0 is the packed
-    entry's LSB group, i.e. the *last* reshape axis); independence need only
-    hold across the element's reachable codes — canonicalization already
-    made every unreachable digit value a copy of a reachable one.
+    entry's LSB group, i.e. the *last* reshape axis; axis extents follow
+    the per-element widths); independence need only hold across the
+    element's reachable codes — canonicalization already made every
+    unreachable digit value a copy of a reachable one.
     """
     fan_in = n.fan_in
-    shape = (1 << bw_in,) * fan_in
+    shape = tuple(1 << int(w) for w in elem_widths[::-1])
     t = n.table.reshape(shape)
     ax = fan_in - 1 - k
     codes = [int(c) for c in reach]
@@ -109,7 +114,9 @@ def prune_dead_inputs(net: CNet) -> dict:
     pruned = 0
     folded = 0
     feat_codes_per_layer = _reachable_feat_codes(net)
-    for lay, feat_codes in zip(net.layers, feat_codes_per_layer):
+    for li, (lay, feat_codes) in enumerate(zip(net.layers,
+                                               feat_codes_per_layer)):
+        widths = net.input_widths(li)
         for n in lay.neurons:
             changed = True
             while changed and n.fan_in > 1:
@@ -117,7 +124,7 @@ def prune_dead_inputs(net: CNet) -> dict:
                 for k in range(n.fan_in):
                     reach = feat_codes[int(n.indices[k])]
                     if n.fan_in > 1 and _try_prune_element(
-                            n, k, lay.bw_in, reach):
+                            n, k, widths[n.indices], reach):
                         pruned += 1
                         changed = True
                         break
@@ -130,14 +137,15 @@ def prune_dead_inputs(net: CNet) -> dict:
                 vals = {int(n.table[int(c)]) for c in reach}
                 if len(vals) == 1:
                     v = vals.pop()
+                    w0 = int(widths[0])
                     already = (int(n.indices[0]) == 0
+                               and n.n_entries == 1 << w0
                                and bool((n.table == v).all()))
                     if not already:
                         folded += 1
                         n.indices = np.zeros(1, dtype=np.int32)
-                        n.table = np.full(1 << lay.bw_in, v,
-                                          dtype=np.int32)
-                        n.reachable = np.ones(1 << lay.bw_in, dtype=bool)
+                        n.table = np.full(1 << w0, v, dtype=np.int32)
+                        n.reachable = np.ones(1 << w0, dtype=bool)
     return {"pruned_elements": pruned, "folded_constants": folded}
 
 

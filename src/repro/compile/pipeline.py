@@ -6,8 +6,12 @@ Levels (each includes the previous):
   1 — reachable-code analysis / don't-care canonicalization + dead-neuron
       elimination.
   2 — (default) + neuron CSE and dead-input pruning, one round.
-  3 — run the full round to a fixpoint: constants exposed by one round's
-      pruning collapse further consumers in the next, until nothing changes.
+  3 — + cross-layer code re-encoding (reencode.py: intermediate bus
+      features narrowed to ceil(log2 k) bits with coordinated
+      producer/consumer rewrites), and the full round iterated to a
+      fixpoint: constants exposed by one round's pruning collapse further
+      consumers in the next, and narrowed features hand pruning fresh
+      singleton elements, until nothing changes.
 
 The input is either a ``list[LayerTruthTable]`` (straight from
 ``logicnet.generate_tables``) or a ``Netlist`` built by
@@ -24,7 +28,7 @@ import time
 
 import numpy as np
 
-from repro.compile import passes, reachability
+from repro.compile import passes, reachability, reencode
 from repro.compile.ir import CNet
 from repro.core.netlist import Netlist
 from repro.core.truth_table import LayerTruthTable
@@ -65,6 +69,21 @@ class CompileStats:
         return sum(p.detail.get("dont_care_entries", 0)
                    for p in self.passes if p.round == 0)
 
+    @property
+    def features_recoded(self) -> int:
+        """Re-encoding *events* over all rounds: a feature narrowed again
+        in a later round (its reachable set shrank further) counts once per
+        round.  For a round-count-independent magnitude use ``bits_saved``,
+        which telescopes (3->2 then 2->1 bits sums to the same 2 bits as a
+        single 3->1 narrowing)."""
+        return sum(p.detail.get("features_recoded", 0) for p in self.passes)
+
+    @property
+    def bits_saved(self) -> int:
+        """Bus bits dropped by re-encoding (sum of old-new widths; exactly
+        the original-to-final width delta regardless of round count)."""
+        return sum(p.detail.get("bits_saved", 0) for p in self.passes)
+
     def as_dict(self) -> dict:
         return {
             "level": self.level,
@@ -78,6 +97,8 @@ class CompileStats:
             "lut_cost_before": self.lut_cost_before,
             "lut_cost_after": self.lut_cost_after,
             "dont_care_entries": self.dont_care_entries,
+            "features_recoded": self.features_recoded,
+            "bits_saved": self.bits_saved,
             "passes": [p.as_dict() for p in self.passes],
         }
 
@@ -119,6 +140,8 @@ def _as_cnet(netlist, in_features: int | None) -> CNet:
 def _shape_signature(net: CNet) -> tuple:
     return tuple((lay.out_features,
                   tuple(n.fan_in for n in lay.neurons),
+                  tuple(-1 if n.out_width is None else n.out_width
+                        for n in lay.neurons),
                   sum(int(n.table.sum()) for n in lay.neurons))
                  for lay in net.layers)
 
@@ -165,6 +188,12 @@ def optimize(netlist, level: int = 2, *,
             if level >= 2:
                 run("prune_dead_inputs", passes.prune_dead_inputs, rnd)
                 run("cse", passes.cse, rnd)
+            if level >= 3:
+                # after pruning/CSE so reachable sets are final for the
+                # round; narrowed features then unlock further pruning in
+                # the next round (singleton -> element removed), which is
+                # why the round iterates to a fixpoint
+                run("reencode", reencode.reencode, rnd)
             run("fold_and_eliminate", passes.fold_and_eliminate, rnd)
             rounds = rnd + 1
             if _shape_signature(net) == sig:
@@ -227,12 +256,14 @@ def summarize(stats: CompileStats) -> str:
 
     def pct(a, b):
         return 100.0 * (1.0 - a / b) if b else 0.0
+    recoded = (f" recoded={s.features_recoded}feat/-{s.bits_saved}bits"
+               if s.features_recoded else "")
     return (f"level={s.level} rounds={s.rounds} "
             f"neurons {s.neurons_before}->{s.neurons_after} "
             f"entries {s.table_entries_before}->{s.table_entries_after} "
             f"bytes {s.table_bytes_before}->{s.table_bytes_after} "
             f"(-{pct(s.table_bytes_after, s.table_bytes_before):.1f}%) "
-            f"LUTs {s.lut_cost_before}->{s.lut_cost_after}")
+            f"LUTs {s.lut_cost_before}->{s.lut_cost_after}{recoded}")
 
 
 __all__ = ["optimize", "optimize_tables", "optimize_triples",

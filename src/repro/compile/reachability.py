@@ -31,36 +31,30 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.compile.ir import CNet, CNeuron
-
-# Entries are processed in chunks so 20+-bit fan-ins never materialize the
-# full (entries,) index vectors more than a slice at a time.
-_CHUNK = 1 << 16
+from repro.compile.ir import (ENTRY_CHUNK, CNet, CNeuron, entry_digits,
+                              entry_widths_offsets)
 
 
-def _entry_digits(entry_ids: np.ndarray, fan_in: int,
-                  bw_in: int) -> np.ndarray:
-    """(E,) packed entries -> (E, fan_in) per-element codes, LSB-first."""
-    shifts = bw_in * np.arange(fan_in, dtype=entry_ids.dtype)
-    return (entry_ids[:, None] >> shifts[None, :]) & ((1 << bw_in) - 1)
-
-
-def scan_neuron(n: CNeuron, bw_in: int, feat_codes: list[np.ndarray],
+def scan_neuron(n: CNeuron, elem_widths: np.ndarray,
+                feat_codes: list[np.ndarray],
                 rewrite: bool) -> tuple[np.ndarray, int]:
     """One chunked sweep over the neuron's entries.
 
-    Computes the per-entry reachability mask and — when ``rewrite`` —
-    canonicalizes don't-cares in the same pass (the digit decomposition is
-    the dominant cost for wide fan-ins, so it is done exactly once).
-    Canonical map, per element k reading feature f: a reachable code maps
-    to itself, an unreachable one to ``min(reachable codes of f)``; the
-    new table value at entry e is the old value at the element-wise mapped
-    entry, so unreachable entries become exact copies of reachable ones.
-    Returns ``(mask, n_dont_care)``.
+    ``elem_widths`` is the per-element input code width (mixed once the
+    re-encoding pass has narrowed upstream features).  Computes the
+    per-entry reachability mask and — when ``rewrite`` — canonicalizes
+    don't-cares in the same pass (the digit decomposition is the dominant
+    cost for wide fan-ins, so it is done exactly once).  Canonical map, per
+    element k reading feature f: a reachable code maps to itself, an
+    unreachable one to ``min(reachable codes of f)``; the new table value
+    at entry e is the old value at the element-wise mapped entry, so
+    unreachable entries become exact copies of reachable ones.  Returns
+    ``(mask, n_dont_care)``.
     """
-    n_codes = 1 << bw_in
+    offs = entry_widths_offsets(elem_widths)
     elem_ok, code_maps = [], []
-    for f in n.indices:
+    for k, f in enumerate(n.indices):
+        n_codes = 1 << int(elem_widths[k])
         reach = feat_codes[int(f)]
         ok = np.isin(np.arange(n_codes), reach)
         elem_ok.append(ok)
@@ -70,15 +64,15 @@ def scan_neuron(n: CNeuron, bw_in: int, feat_codes: list[np.ndarray],
 
     mask = np.ones(n.n_entries, dtype=bool)
     old = n.table.copy() if rewrite else n.table
-    for start in range(0, n.n_entries, _CHUNK):
-        ids = np.arange(start, min(start + _CHUNK, n.n_entries),
+    for start in range(0, n.n_entries, ENTRY_CHUNK):
+        ids = np.arange(start, min(start + ENTRY_CHUNK, n.n_entries),
                         dtype=np.int64)
-        digits = _entry_digits(ids, n.fan_in, bw_in)
+        digits = entry_digits(ids, elem_widths)
         canon = np.zeros_like(ids)
         for k in range(n.fan_in):
             mask[ids] &= elem_ok[k][digits[:, k]]
             if rewrite:
-                canon |= code_maps[k][digits[:, k]] << (bw_in * k)
+                canon |= code_maps[k][digits[:, k]] << int(offs[k])
         if rewrite:
             n.table[ids] = old[canon]
     if rewrite:
@@ -102,10 +96,12 @@ def analyze_and_canonicalize(net: CNet, rewrite: bool = True) -> dict:
         for _ in range(net.in_features)]
     dont_care = 0
     reach_counts: list[list[int]] = []
-    for lay in net.layers:
+    for li, lay in enumerate(net.layers):
+        widths = net.input_widths(li)
         next_codes = []
         for n in lay.neurons:
-            mask, n_dc = scan_neuron(n, lay.bw_in, feat_codes, rewrite)
+            mask, n_dc = scan_neuron(n, widths[n.indices], feat_codes,
+                                     rewrite)
             dont_care += n_dc
             next_codes.append(np.unique(n.table[mask]))
         reach_counts.append([len(c) for c in next_codes])

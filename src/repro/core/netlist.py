@@ -45,6 +45,12 @@ class Netlist:
     # pipeline's lowering) so the optimizer can lift bus bits back to
     # feature indices.  None on hand-built netlists.
     layer_bw_in: list[int] | None = None
+    # per-layer, per-feature input code widths — set by the compile
+    # pipeline's lowering once the cross-layer re-encoding pass has narrowed
+    # individual bus features below the uniform layer_bw_in.  Feature f of
+    # layer l's input bus occupies bits [sum(widths[:f]), sum(widths[:f+1]))
+    # of that layer's bus.  None means every feature is layer_bw_in wide.
+    layer_in_widths: list[list[int]] | None = None
 
     @property
     def n_hbbs(self) -> int:

@@ -51,8 +51,10 @@ def network_table_forward(tables: list[LayerTruthTable],
 
     ``optimize_level`` (0-3) first runs the truth-table compiler
     (``repro.compile.optimize``) over the stack — don't-care
-    canonicalization, CSE, dead-input pruning, DCE — shrinking the tables
-    while keeping the output bit-identical on every reachable input.
+    canonicalization, CSE, dead-input pruning, DCE, and at level 3
+    cross-layer code re-encoding (per-feature bus narrowing, iterated to a
+    fixpoint) — shrinking the tables while keeping the output
+    bit-identical on every reachable input.
     """
     if optimize_level is not None:
         from repro.compile import optimize_tables

@@ -84,6 +84,13 @@ class NetworkSlabs:
         return (self.idx_slab.size * self.idx_slab.dtype.itemsize
                 + self.table_slab.size * self.table_slab.dtype.itemsize)
 
+    def vmem_breakdown(self) -> dict:
+        """Per-slab VMEM bytes (bench / fused-fallback diagnostics)."""
+        idx = self.idx_slab.size * self.idx_slab.dtype.itemsize
+        tab = self.table_slab.size * self.table_slab.dtype.itemsize
+        return {"idx_slab_bytes": idx, "table_slab_bytes": tab,
+                "total_bytes": idx + tab, "packed_int8": self.packed}
+
 
 def estimate_slab_bytes(layers: Sequence[tuple]) -> tuple[int, bool, bool]:
     """Projected fused-slab footprint, int8-pack and f32-exact eligibility.

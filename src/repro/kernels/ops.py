@@ -8,6 +8,7 @@ dtypes against the ref.py oracles either way.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -30,6 +31,50 @@ FUSED_VMEM_BUDGET_BYTES = 8 * 2 ** 20
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedPlan:
+    """Why ``lut_network`` will (or won't) take the fused single-kernel path.
+
+    ``reason`` is one of ``"fused"`` (eligible), ``"slab_exceeds_vmem_budget"``
+    or ``"codes_exceed_f32_exact_range"`` — the two fallback causes the
+    kernel enforces.  The bench records this next to its timings so a
+    regression gate can tell "fused fell back" apart from "fused got
+    slower" (see benchmarks/kernel_bench.py).
+    """
+
+    fused: bool
+    reason: str
+    slab_bytes: int
+    vmem_budget_bytes: int
+    pack: bool
+    f32_exact: bool
+
+    def as_dict(self) -> dict:
+        # headroom rides along so artifact consumers get the slab-vs-budget
+        # breakdown from the one authoritative record
+        return {**dataclasses.asdict(self),
+                "headroom_bytes": self.vmem_budget_bytes - self.slab_bytes}
+
+
+def fused_plan(layers, vmem_budget_bytes: int = FUSED_VMEM_BUDGET_BYTES
+               ) -> FusedPlan:
+    """Evaluate the fused-path eligibility gate without building slabs.
+
+    The single source of truth for the decision ``lut_network`` makes:
+    projected slab bytes must fit the VMEM budget and every output code
+    must be exact under the kernel's f32 one-hot gathers.
+    """
+    est_bytes, pack, f32_exact = estimate_slab_bytes(layers)
+    if not f32_exact:
+        fused, reason = False, "codes_exceed_f32_exact_range"
+    elif est_bytes > vmem_budget_bytes:
+        fused, reason = False, "slab_exceeds_vmem_budget"
+    else:
+        fused, reason = True, "fused"
+    return FusedPlan(fused, reason, est_bytes, vmem_budget_bytes,
+                     pack, f32_exact)
 
 
 @functools.partial(jax.jit, static_argnames=("bw_in", "use_pallas"))
@@ -59,7 +104,9 @@ def lut_network(codes: jax.Array, layers, *, fused: bool = True,
     ``optimize_level`` (0-3) runs the truth-table compiler
     (``repro.compile``) over the stack first: smaller slabs mean stacks
     that used to overflow ``vmem_budget_bytes`` can take the fused path,
-    and the output stays bit-identical on every reachable input.
+    and the output stays bit-identical on every reachable input.  Level 3
+    adds cross-layer code re-encoding — when it narrows a bus's *widest*
+    feature the lowered uniform tables shrink 2^fan_in-fold per saved bit.
 
     Slabs are rebuilt (host-side numpy) and the kernel re-traced on every
     call — fine for verification and batch scoring; a throughput serving
@@ -77,9 +124,9 @@ def lut_network(codes: jax.Array, layers, *, fused: bool = True,
                                    jnp.asarray(table), int(bw_in))
         return c
     if fused:
-        est_bytes, pack, f32_exact = estimate_slab_bytes(layers)
-        if f32_exact and est_bytes <= vmem_budget_bytes:
-            slabs = build_network_slabs(layers, pack=pack)
+        plan = fused_plan(layers, vmem_budget_bytes)
+        if plan.fused:
+            slabs = build_network_slabs(layers, pack=plan.pack)
             return lut_network_pallas(codes, slabs, block_b=block_b,
                                       interpret=not _on_tpu())
     c = codes

@@ -1,0 +1,115 @@
+"""CI perf-regression gate: the bench-vs-baseline comparison logic.
+
+Proves the gate *demonstrably fails* on an injected regression (a
+temporarily inflated baseline standing in for "the numbers got worse") and
+passes on the real numbers — without running the bench itself.  The gate
+lives in benchmarks/kernel_bench.py (``--baseline`` /
+``--update-baseline``); CI's bench-smoke job runs it on every push/PR.
+"""
+
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+
+from benchmarks.kernel_bench import (BASELINE_PATH,  # noqa: E402
+                                     baseline_from_payload,
+                                     check_against_baseline)
+
+
+def _payload(speedup=2.5, l2_pct=17.2, l2_bytes=53912, l3_pct=17.2,
+             l3_bytes=37504, l3_bits_saved=105, mode="smoke",
+             backend="cpu"):
+    """Bench-JSON shape with only the gated quantities filled in."""
+    return {
+        "mode": mode,
+        "backend": backend,
+        "fused_speedup": speedup,
+        "compile": {
+            "slab_reduction_pct": l2_pct,
+            "stats": {"table_bytes_after": l2_bytes},
+            "level3": {
+                "slab_reduction_pct": l3_pct,
+                "stats": {"table_bytes_after": l3_bytes,
+                          "bits_saved": l3_bits_saved},
+            },
+        },
+    }
+
+
+def test_gate_passes_on_own_numbers():
+    payload = _payload()
+    assert check_against_baseline(payload,
+                                  baseline_from_payload(payload)) == []
+
+
+def test_gate_allows_timing_noise_within_tolerance():
+    # 2.3x vs a 3.0x baseline is inside the 25% interpret-mode tolerance
+    baseline = baseline_from_payload(_payload(speedup=3.0))
+    assert check_against_baseline(_payload(speedup=2.3), baseline) == []
+
+
+def test_gate_fails_on_injected_speedup_regression():
+    # inflating the baseline injects a regression: 2.5x measured vs a 4.0x
+    # baseline is below the 3.0x floor -> the gate must trip
+    baseline = baseline_from_payload(_payload(speedup=4.0))
+    failures = check_against_baseline(_payload(speedup=2.5), baseline)
+    assert any("fused_speedup" in f for f in failures), failures
+
+
+def test_gate_fails_on_table_bytes_regression():
+    # level-3 table bytes ballooning back to the level-2 figure must trip
+    baseline = baseline_from_payload(_payload())
+    failures = check_against_baseline(_payload(l3_bytes=53912), baseline)
+    assert any("level-3 table_bytes_after" in f for f in failures), failures
+
+
+def test_gate_fails_when_reencoding_stops_firing():
+    baseline = baseline_from_payload(_payload())
+    failures = check_against_baseline(_payload(l3_bits_saved=0), baseline)
+    assert any("bits_saved" in f for f in failures), failures
+
+
+def test_gate_refuses_protocol_mismatch():
+    # a full-mode or TPU run is not comparable with the smoke/cpu baseline
+    baseline = baseline_from_payload(_payload())
+    failures = check_against_baseline(_payload(mode="full"), baseline)
+    assert any("mode mismatch" in f for f in failures), failures
+    failures = check_against_baseline(_payload(backend="tpu"), baseline)
+    assert any("backend mismatch" in f for f in failures), failures
+
+
+def test_gate_fails_on_slab_reduction_regression():
+    baseline = baseline_from_payload(_payload(l2_pct=25.0))
+    failures = check_against_baseline(_payload(), baseline)
+    assert any("slab_reduction_pct" in f for f in failures), failures
+
+
+def test_gate_ignores_small_deterministic_drift():
+    # cross-version float drift in table generation stays within tolerance
+    baseline = baseline_from_payload(_payload())
+    payload = _payload(l2_pct=16.9, l2_bytes=53912 + 500,
+                       l3_bytes=37504 + 500)
+    assert check_against_baseline(payload, baseline) == []
+
+
+def test_committed_baseline_is_well_formed():
+    """The checked-in baseline gates every quantity the CI job reads."""
+    with open(BASELINE_PATH) as f:
+        baseline = json.load(f)
+    assert baseline["fused_speedup"] > 1.0
+    assert baseline["mode"] == "smoke" and baseline["backend"] == "cpu"
+    comp = baseline["compile"]
+    assert comp["table_bytes_after"] > comp["level3"]["table_bytes_after"]
+    assert comp["level3"]["bits_saved"] > 0
+    # a run reproducing exactly the baseline numbers passes the gate
+    payload = _payload(
+        speedup=baseline["fused_speedup"],
+        l2_pct=comp["slab_reduction_pct"],
+        l2_bytes=comp["table_bytes_after"],
+        l3_pct=comp["level3"]["slab_reduction_pct"],
+        l3_bytes=comp["level3"]["table_bytes_after"],
+        l3_bits_saved=comp["level3"]["bits_saved"])
+    assert check_against_baseline(payload, baseline) == []

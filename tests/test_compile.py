@@ -167,6 +167,100 @@ def test_invalid_level_rejected():
 
 
 # ---------------------------------------------------------------------------
+# cross-layer code re-encoding (level 3)
+# ---------------------------------------------------------------------------
+
+def test_reencode_narrows_producer_and_consumer():
+    # layer-0 neuron emits only codes {2, 5} of its 3-bit container: level 3
+    # re-codes the feature to 1 bit (producer emits ranks), and the
+    # consumer's table shrinks from 8 entries to 2
+    t0 = _tt([[2, 5]], [[0]], 1, 3)
+    t1 = _tt([[7, 1, 2, 1, 0, 3, 6, 5]], [[0]], 3, 3)
+    res = C.optimize([t0, t1], level=3, in_features=1)
+    n0 = res.cnet.layers[0].neurons[0]
+    n1 = res.cnet.layers[1].neurons[0]
+    assert n0.out_width == 1
+    np.testing.assert_array_equal(n0.table, [0, 1])
+    assert n1.n_entries == 2
+    np.testing.assert_array_equal(n1.table, [2, 3])   # old entries 2 and 5
+    assert res.stats.features_recoded == 1
+    assert res.stats.bits_saved == 2
+    assert res.stats.as_dict()["features_recoded"] == 1
+    # compact widths reach the netlist / Verilog target
+    nl = res.netlist
+    assert nl.layers[0][0].out_bits == 1
+    assert nl.layer_in_widths[1] == [1]
+    # ... but never the final layer's outputs (the network contract)
+    assert res.cnet.layers[-1].neurons[0].out_width is None
+    assert res.tables[-1].bw_out == 3
+    _assert_same_function([t0, t1], res, 1, 1)
+
+
+def test_reencode_non_power_of_two_set_keeps_canonical_dont_cares():
+    # k=3 reachable codes need 2 bits; compact digit 3 can never arrive and
+    # must decode to compact code 0's column (canonical don't-care)
+    t0 = _tt([[1, 4, 6, 1]], [[0, 1]], 1, 3)
+    t1 = _tt([[7, 1, 2, 1, 0, 3, 6, 5]], [[0]], 3, 3)
+    res = C.optimize([t0, t1], level=3, in_features=2)
+    n0 = res.cnet.layers[0].neurons[0]
+    n1 = res.cnet.layers[1].neurons[0]
+    assert n0.out_width == 2
+    assert n1.n_entries == 4
+    # decoded entries: [old[1], old[4], old[6], old[1] (dont-care copy)]
+    np.testing.assert_array_equal(n1.table, [1, 0, 6, 1])
+    np.testing.assert_array_equal(n1.reachable, [True, True, True, False])
+    _assert_same_function([t0, t1], res, 2, 1)
+
+
+def test_reencode_single_code_feature_collapses():
+    # the "width 0" information-content edge: a feature carrying ONE code,
+    # read by a fan_in-1 consumer pruning cannot shrink below one element.
+    # Re-encoding clamps it to the 1-bit minimum width and the consumer's
+    # table collapses from 8 entries to 2, bit-exactly
+    t0 = _tt([[6, 6]], [[0]], 1, 3)
+    t1 = _tt([[0, 1, 2, 3, 4, 5, 7, 6]], [[0]], 3, 3)
+    res = C.optimize([t0, t1], level=3, in_features=1)
+    n0 = res.cnet.layers[0].neurons[0]
+    n1 = res.cnet.layers[1].neurons[0]
+    assert n0.out_width == 1
+    assert n1.n_entries == 2
+    assert set(np.asarray(n1.table).tolist()) == {7}
+    _assert_same_function([t0, t1], res, 1, 1)
+
+
+def test_reencode_mixed_width_bus_lowers_to_uniform_tables():
+    # one feature narrows to 1 bit, its sibling keeps all 3: the IR table
+    # is compact (2^(1+3) entries) while the uniform lowering pads back to
+    # the bus's widest feature for the kernels' shift-pack convention
+    rng = np.random.default_rng(7)
+    tab_narrow = rng.choice([2, 5], size=16).astype(np.int32)
+    tab_wide = np.concatenate([np.arange(8), rng.integers(0, 8, 8)]
+                              ).astype(np.int32)
+    t0 = _tt([tab_narrow, tab_wide], [[0, 1], [0, 1]], 2, 3)
+    t1 = _tt([rng.integers(0, 4, 64).astype(np.int32)], [[0, 1]], 3, 2)
+    res = C.optimize([t0, t1], level=3, in_features=2)
+    widths = [res.cnet.layers[0].out_width_of(j) for j in range(2)]
+    assert sorted(widths) == [1, 3], widths
+    n1 = res.cnet.layers[1].neurons[0]
+    assert n1.n_entries == 1 << 4
+    tt1 = res.tables[1]
+    assert tt1.bw_in == 3 and tt1.n_entries == 1 << 6
+    _assert_same_function([t0, t1], res, 2, 2)
+
+
+def test_reencoded_netlist_roundtrips_through_optimizer():
+    # a re-encoded (mixed-width) netlist lifts back via layer_in_widths and
+    # re-optimizes to the same function without growing
+    t0 = _tt([[2, 5]], [[0]], 1, 3)
+    t1 = _tt([[7, 1, 2, 1, 0, 3, 6, 5], [5, 0, 3, 0, 1, 2, 4, 7]],
+             [[0], [0]], 3, 3)
+    res = C.optimize([t0, t1], level=3, in_features=1)
+    res2 = C.optimize(res.netlist, level=3)
+    assert res2.stats.table_bytes_after <= res.stats.table_bytes_after
+    _assert_same_function([t0, t1], res2, 1, 1)
+
+
+# ---------------------------------------------------------------------------
 # lowering targets
 # ---------------------------------------------------------------------------
 
@@ -254,12 +348,13 @@ def _trained_toy(seed=0, hidden=(6, 5), fan_in=2, bw=2, in_features=6,
     return cfg, model, x
 
 
-def _check_all_paths(cfg, tables, res, n_words=40, seed=0):
-    """Raw vs optimized: per-layer jnp, fused Pallas, Verilog interpreter."""
+def _check_all_paths_tables(tables, res, in_features, bw,
+                            n_words=40, seed=0):
+    """Raw vs optimized: per-layer jnp, fused Pallas, IR reference forward
+    and the Verilog interpreter — the full three-execution-path contract."""
     rng = np.random.default_rng(seed)
-    bw = cfg.bw
     codes_in = jnp.asarray(rng.integers(0, 2 ** bw,
-                                        (17, cfg.in_features),
+                                        (17, in_features),
                                         dtype=np.int32))
     want = np.asarray(network_table_forward(tables, codes_in))
     got_pl = np.asarray(network_table_forward(res.tables, codes_in))
@@ -267,6 +362,8 @@ def _check_all_paths(cfg, tables, res, n_words=40, seed=0):
     got_fused = np.asarray(network_table_forward(res.tables, codes_in,
                                                  fused=True))
     np.testing.assert_array_equal(got_fused, want)
+    np.testing.assert_array_equal(
+        C.forward_codes(res.cnet, np.asarray(codes_in)), want)
 
     files = generate_verilog(res.netlist)
     n_layers = 1 + max(int(m.group(1)) for m in
@@ -275,15 +372,20 @@ def _check_all_paths(cfg, tables, res, n_words=40, seed=0):
     bw_out = tables[-1].bw_out
     o_last = tables[-1].out_features
     for _ in range(n_words):
-        word = int(rng.integers(0, 2 ** (bw * cfg.in_features)))
+        word = int(rng.integers(0, 2 ** (bw * in_features)))
         digits = [(word >> (bw * f)) & (2 ** bw - 1)
-                  for f in range(cfg.in_features)]
+                  for f in range(in_features)]
         expect = np.asarray(network_table_forward(
             tables, jnp.asarray([digits], jnp.int32)))[0]
         out_word = evaluate_verilog(files, word, n_layers=n_layers)
         got = [(out_word >> (bw_out * j)) & (2 ** bw_out - 1)
                for j in range(o_last)]
         assert got == [int(v) for v in expect], f"word={word}"
+
+
+def _check_all_paths(cfg, tables, res, n_words=40, seed=0):
+    _check_all_paths_tables(tables, res, cfg.in_features, cfg.bw,
+                            n_words=n_words, seed=seed)
 
 
 @pytest.mark.parametrize("level", [1, 2, 3])
@@ -306,7 +408,8 @@ def test_verify_tables_with_optimize_level():
 
 def test_model_a_stack_shrinks_measurably():
     """The acceptance-criteria case: fpga4hep model A's packed tables and
-    fused slab both shrink, and the result stays bit-exact (sampled)."""
+    fused slab both shrink at level 2, level-3 re-encoding beats level 2's
+    table bytes, and both results stay bit-exact (sampled)."""
     from repro.configs import fpga4hep
     from repro.kernels.lut_network import estimate_slab_bytes
 
@@ -330,10 +433,58 @@ def test_model_a_stack_shrinks_measurably():
                                            fused=True))
     np.testing.assert_array_equal(got, want)
 
+    # level 3: cross-layer re-encoding narrows real generated buses and
+    # must land strictly below the level-2 packed-table figure
+    res3 = C.optimize(tables, level=3, in_features=cfg.in_features)
+    assert res3.stats.features_recoded > 0
+    assert res3.stats.bits_saved > 0
+    assert (res3.stats.table_bytes_after
+            < res.stats.table_bytes_after)
+    got3 = np.asarray(network_table_forward(res3.tables, codes_in,
+                                            fused=True))
+    np.testing.assert_array_equal(got3, want)
+
 
 # ---------------------------------------------------------------------------
 # hypothesis sweep: the full round-trip contract (skipped w/o hypothesis)
 # ---------------------------------------------------------------------------
+
+@given(data=st.data())
+@settings(max_examples=15, deadline=None)
+def test_reencode_random_sparse_stacks_bit_exact_hypothesis(data):
+    """Level-3 re-encoding contract on random sparse stacks whose layer
+    value pools are deliberately small (k as low as 1, the width-collapse
+    edge): output is bit-exact with the unoptimized reference across all
+    three execution paths — per-layer jnp, fused Pallas, Verilog."""
+    seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+    rng = np.random.default_rng(seed)
+    bw = data.draw(st.integers(2, 3), label="bw")
+    n_layers = data.draw(st.integers(2, 3), label="n_layers")
+    in_features = data.draw(st.integers(2, 4), label="in_features")
+    width = in_features
+    tables = []
+    for li in range(n_layers):
+        n_out = data.draw(st.integers(2, 5), label=f"o{li}")
+        fi = min(2, width)
+        idx = np.stack([np.sort(rng.choice(width, fi, replace=False))
+                        for _ in range(n_out)]).astype(np.int32)
+        if li + 1 < n_layers:
+            # intermediate bus: draw each layer's emitted codes from a
+            # small pool so features carry k < 2^bw distinct codes and the
+            # re-encoding pass actually fires (k == 1 collapses a feature)
+            k = data.draw(st.integers(1, 2 ** bw), label=f"k{li}")
+            pool = rng.choice(2 ** bw, size=k, replace=False)
+        else:
+            pool = np.arange(2 ** bw)
+        tab = rng.choice(pool, size=(n_out, 2 ** (fi * bw))
+                         ).astype(np.int32)
+        tables.append(_tt(tab, idx, bw, bw))
+        width = n_out
+    res = C.optimize(tables, level=3, in_features=in_features)
+    assert res.stats.table_bytes_after <= res.stats.table_bytes_before
+    _check_all_paths_tables(tables, res, in_features, bw,
+                            n_words=10, seed=seed)
+
 
 @given(data=st.data())
 @settings(max_examples=12, deadline=None)
