@@ -10,9 +10,13 @@ Verilog.
 
     from repro import compile as rcompile
     res = rcompile.optimize(tables, level=2)
-    res.tables    # uniform LayerTruthTables (drop-in for the kernels)
-    res.netlist   # per-neuron Netlist with don't-care masks (Verilog)
-    res.stats     # per-pass reduction statistics
+    res.tables        # uniform LayerTruthTables (the per-layer path)
+    res.mixed_tables  # compact MixedLayerTables (the fused mixed-width
+                      # Pallas path: per-(neuron, element) shifts, exact
+                      # 2^(sum of input widths)-entry tables — VMEM costs
+                      # exactly what the compiler proved)
+    res.netlist       # per-neuron Netlist with don't-care masks (Verilog)
+    res.stats         # per-pass reduction statistics
 
 Passes: reachable-code analysis + don't-care canonicalization, neuron CSE,
 dead-input pruning, cross-layer code re-encoding (level 3: a bus feature
@@ -23,13 +27,17 @@ elimination.  See pipeline.py for the level ladder.
 
 from repro.compile.ir import CLayer, CNet, CNeuron, forward_codes
 from repro.compile.pipeline import (CompileStats, OptimizeResult, PassStats,
-                                    optimize, optimize_tables,
-                                    optimize_triples, raw_stats, summarize)
+                                    optimize, optimize_mixed_tables,
+                                    optimize_tables, optimize_triples,
+                                    raw_stats, summarize,
+                                    tables_from_triples)
 from repro.compile.reencode import reencode
+from repro.core.truth_table import MixedLayerTables
 
 __all__ = [
     "CLayer", "CNet", "CNeuron", "forward_codes",
-    "CompileStats", "OptimizeResult", "PassStats",
-    "optimize", "optimize_tables", "optimize_triples", "raw_stats",
-    "reencode", "summarize",
+    "CompileStats", "MixedLayerTables", "OptimizeResult", "PassStats",
+    "optimize", "optimize_mixed_tables", "optimize_tables",
+    "optimize_triples", "raw_stats", "reencode", "summarize",
+    "tables_from_triples",
 ]

@@ -27,6 +27,12 @@ Lowering goes both ways:
     still applies) and neurons below the layer's max fan-in are padded
     with a duplicate of their first input; padded digits and the entries
     of widened elements are unreachable by construction.
+  * ``CNet.to_mixed_tables()`` -> compact ``MixedLayerTables`` list for the
+    fused mixed-width Pallas path (``kernels.lut_network``).  Nothing is
+    padded: each neuron keeps its exact per-element widths as a
+    per-(neuron, element) shift/width pair and its table stays the compact
+    ``2^(sum of element widths)`` entries the passes produced — the fused
+    kernel banks exactly the bytes the compiler proved.
   * ``CNet.to_netlist()`` -> exact per-neuron ``Netlist`` for Verilog; no
     padding, each neuron keeps its own (possibly pruned) fan-in width and
     its own (possibly re-encoded, compact) output width — emitted wires
@@ -41,7 +47,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.netlist import Netlist, NeuronHBB
-from repro.core.truth_table import LayerTruthTable
+from repro.core.truth_table import LayerTruthTable, MixedLayerTables
 
 # Entry sweeps are chunked so 20+-bit fan-ins never materialize the full
 # (entries, fan_in) digit matrices at once — the shared budget for every
@@ -291,6 +297,47 @@ class CNet:
                     tab[j, ids] = n.table[compact]
             tables.append(LayerTruthTable(tab, idx, u, u_out))
         return tables
+
+    def to_mixed_tables(self) -> list[MixedLayerTables]:
+        """Compact mixed-width tables (the fused mixed-width Pallas path).
+
+        The zero-padding lowering: each neuron's table is handed over
+        exactly as the passes left it — ``2^(sum of its element widths)``
+        entries, dense over the compact per-element widths — together with
+        a per-(neuron, element) shift/width pair that generalizes the
+        kernels' uniform ``bw_in * k`` shift-pack.  Neurons below the
+        layer's max fan-in repeat their first index with element width 0
+        (masked to a zero contribution in the kernel), so the only padded
+        storage is the tiny index/shift/width metadata, never table
+        entries.  ``build_mixed_network_slabs`` row-stacks the result so
+        the fused kernel's VMEM cost equals the netlist's exact
+        ``table_bytes()`` accounting.
+        """
+        out = []
+        for li, layer in enumerate(self.layers):
+            widths = self.input_widths(li)
+            fi = max(layer.max_fan_in(), 1)
+            o = layer.out_features
+            idx = np.zeros((o, fi), dtype=np.int32)
+            shifts = np.zeros((o, fi), dtype=np.int32)
+            elem_w = np.zeros((o, fi), dtype=np.int32)
+            entry_bits = np.zeros(o, dtype=np.int32)
+            tables = []
+            for j, n in enumerate(layer.neurons):
+                pad = n.indices[0] if n.fan_in else np.int32(0)
+                idx[j, :n.fan_in] = n.indices
+                idx[j, n.fan_in:] = pad
+                ew = (widths[n.indices] if n.fan_in
+                      else np.zeros(0, np.int64))
+                offs = entry_widths_offsets(ew)
+                shifts[j, :n.fan_in] = offs
+                shifts[j, n.fan_in:] = int(ew.sum())
+                elem_w[j, :n.fan_in] = ew
+                entry_bits[j] = int(ew.sum())
+                tables.append(n.table.astype(np.int32, copy=True))
+            out.append(MixedLayerTables(idx, shifts, elem_w, entry_bits,
+                                        tuple(tables)))
+        return out
 
     def to_netlist(self) -> Netlist:
         """Exact per-neuron netlist (the Verilog contract), masks attached.

@@ -31,7 +31,7 @@ import numpy as np
 from repro.compile import passes, reachability, reencode
 from repro.compile.ir import CNet
 from repro.core.netlist import Netlist
-from repro.core.truth_table import LayerTruthTable
+from repro.core.truth_table import LayerTruthTable, MixedLayerTables
 
 MAX_ROUNDS = 16  # fixpoint guard; each round strictly shrinks the net
 
@@ -118,6 +118,18 @@ class OptimizeResult:
         return self._tables
 
     @property
+    def mixed_tables(self) -> list[MixedLayerTables]:
+        """Compact per-neuron tables for the fused mixed-width Pallas path.
+
+        Unlike ``tables`` nothing is padded back to a uniform element
+        width: the fused kernel's slabs built from this lowering cost
+        exactly the bytes ``cnet.table_bytes()`` accounts for.
+        """
+        if self._mixed is None:
+            self._mixed = self.cnet.to_mixed_tables()
+        return self._mixed
+
+    @property
     def netlist(self) -> Netlist:
         """Exact per-neuron netlist (with don't-care masks) for Verilog."""
         if self._netlist is None:
@@ -126,6 +138,7 @@ class OptimizeResult:
 
     def __post_init__(self) -> None:
         self._tables: list[LayerTruthTable] | None = None
+        self._mixed: list[MixedLayerTables] | None = None
         self._netlist: Netlist | None = None
 
 
@@ -219,12 +232,13 @@ def optimize_tables(tables: list[LayerTruthTable], level: int = 2, *,
     return optimize(tables, level, in_features=in_features).tables
 
 
-def optimize_triples(layers, level: int = 2, *,
-                     in_features: int | None = None) -> list[tuple]:
-    """``(indices, table, bw_in)`` triples in/out — ``ops.lut_network``'s
-    wire format.  Output bit-widths are inferred (the next layer's
-    ``bw_in``; widest code for the last layer) since triples don't carry
-    them; they only affect storage accounting, not the computed function.
+def tables_from_triples(layers) -> list[LayerTruthTable]:
+    """``(indices, table, bw_in)`` triples -> ``LayerTruthTable`` list.
+
+    Output bit-widths are inferred (the next layer's ``bw_in``; widest
+    code for the last layer) since triples don't carry them; they only
+    affect storage accounting, not the computed function.  Shared by
+    ``optimize_triples`` and ``ops.lut_network``'s in-line compile step.
     """
     triples = [(np.asarray(i), np.asarray(t), int(b)) for i, t, b in layers]
     tables = []
@@ -235,8 +249,28 @@ def optimize_triples(layers, level: int = 2, *,
             bw_out = max(1, int(tab.max(initial=0)).bit_length())
         tables.append(LayerTruthTable(tab.astype(np.int32),
                                       idx.astype(np.int32), bw, bw_out))
-    opt = optimize(tables, level, in_features=in_features).tables
+    return tables
+
+
+def optimize_triples(layers, level: int = 2, *,
+                     in_features: int | None = None) -> list[tuple]:
+    """``(indices, table, bw_in)`` triples in/out — ``ops.lut_network``'s
+    wire format (uniform lowering; see ``OptimizeResult.mixed_tables`` /
+    ``optimize_mixed_tables`` for the compact mixed-width lowering the
+    fused kernel consumes directly)."""
+    opt = optimize(tables_from_triples(layers), level,
+                   in_features=in_features).tables
     return [(tt.indices, tt.table, tt.bw_in) for tt in opt]
+
+
+def optimize_mixed_tables(tables, level: int = 2, *,
+                          in_features: int | None = None
+                          ) -> list[MixedLayerTables]:
+    """Convenience: tables in, compact mixed-width tables out.
+
+    The lowering ``kernels.lut_network.build_mixed_network_slabs`` packs
+    into the fused kernel's exact-footprint slabs."""
+    return optimize(tables, level, in_features=in_features).mixed_tables
 
 
 def raw_stats(tables: list[LayerTruthTable],
@@ -267,5 +301,6 @@ def summarize(stats: CompileStats) -> str:
 
 
 __all__ = ["optimize", "optimize_tables", "optimize_triples",
+           "optimize_mixed_tables", "tables_from_triples",
            "raw_stats", "summarize",
            "OptimizeResult", "CompileStats", "PassStats", "MAX_ROUNDS"]

@@ -178,6 +178,9 @@ def verify_tables(cfg: LogicNetCfg, model: list[dict],
     Pallas kernel instead of the per-layer jnp reference;
     ``optimize_level`` first shrinks the tables through the truth-table
     compiler (``repro.compile``) — the equality contract must survive it.
+    ``fused=True`` with an ``optimize_level`` executes the compiler's
+    mixed-width lowering (exact per-neuron table sizes in VMEM), so this
+    is also the mixed kernel's end-to-end verification hook.
     """
     cfgs = cfg.layer_cfgs()
     in_codes = codes(cfgs[0].in_quant, x)
@@ -202,8 +205,10 @@ def sparse_head_forward(cfg: LogicNetCfg, model: list[dict],
     """Deployment-style forward: sparse stack via tables, then the dense
     final layer (if any) in arithmetic.  ``fused`` executes the sparse
     stack as one whole-network Pallas kernel (the FPGA-pipeline path);
-    ``optimize_level`` runs the truth-table compiler first so the fused
-    slabs shrink (bit-identical output on reachable inputs)."""
+    ``optimize_level`` runs the truth-table compiler first and the fused
+    engine consumes its mixed-width lowering, so the VMEM slabs shrink to
+    the compiler-exact footprint (bit-identical output on reachable
+    inputs)."""
     cfgs = cfg.layer_cfgs()
     c0 = cfgs[0]
     in_codes = codes(c0.in_quant, x)

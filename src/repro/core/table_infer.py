@@ -54,17 +54,23 @@ def network_table_forward(tables: list[LayerTruthTable],
     canonicalization, CSE, dead-input pruning, DCE, and at level 3
     cross-layer code re-encoding (per-feature bus narrowing, iterated to a
     fixpoint) — shrinking the tables while keeping the output
-    bit-identical on every reachable input.
+    bit-identical on every reachable input.  With ``fused=True`` the
+    compile step happens inside ``lut_network``, which then executes the
+    compiler's compact *mixed-width* lowering directly (per-(neuron,
+    element) shift slabs, exact per-neuron table sizes) instead of the
+    padded uniform tables — the VMEM slabs cost exactly what the compiler
+    proved.
     """
-    if optimize_level is not None:
-        from repro.compile import optimize_tables
-        tables = optimize_tables(list(tables), optimize_level,
-                                 in_features=in_codes.shape[-1])
     if fused:
         from repro.kernels.ops import lut_network
         return lut_network(in_codes,
                            [(tt.indices, tt.table, tt.bw_in)
-                            for tt in tables], fused=True)
+                            for tt in tables], fused=True,
+                           optimize_level=optimize_level)
+    if optimize_level is not None:
+        from repro.compile import optimize_tables
+        tables = optimize_tables(list(tables), optimize_level,
+                                 in_features=in_codes.shape[-1])
     c = in_codes
     for tt in tables:
         c = layer_table_forward(tt, c)

@@ -61,6 +61,57 @@ class LayerTruthTable:
         return self.table.shape[1]
 
 
+@dataclasses.dataclass(frozen=True)
+class MixedLayerTables:
+    """Compact mixed-width truth tables for one sparse layer.
+
+    The exact-width sibling of ``LayerTruthTable``: where the uniform form
+    pads every fan-in element to a common ``bw_in`` (so the kernels can use
+    one ``bw_in * k`` shift for the whole layer), this form keeps each
+    neuron's table dense over the *actual* per-element code widths the
+    compiler proved (``repro.compile``'s dead-input pruning and level-3
+    re-encoding).  Element k of neuron j contributes
+    ``(code & (2^elem_widths[j,k] - 1)) << shifts[j,k]`` to its table
+    entry, and the table holds exactly ``2^entry_bits[j]`` codes — no
+    padding to the widest feature or to a per-layer entry count.
+
+    indices:     (out_features, fan_in_max) int32 input feature indices;
+                 neurons below ``fan_in_max`` repeat their first index
+                 (the padded elements carry ``elem_widths == 0`` so they
+                 contribute nothing to the packed entry).
+    shifts:      (out_features, fan_in_max) int32 LSB-first bit offsets of
+                 each element inside the neuron's packed table entry.
+    elem_widths: (out_features, fan_in_max) int32 per-element code widths
+                 (0 marks a padded element).
+    entry_bits:  (out_features,) int32 — ``sum_k elem_widths[j, k]``;
+                 neuron j's table has ``2^entry_bits[j]`` entries.
+    tables:      per-neuron ``(2^entry_bits[j],)`` int32 output codes.
+
+    Produced by ``repro.compile.ir.CNet.to_mixed_tables``; consumed by
+    ``repro.kernels.lut_network.build_mixed_network_slabs`` (the fused
+    mixed-width Pallas path).
+    """
+
+    indices: np.ndarray
+    shifts: np.ndarray
+    elem_widths: np.ndarray
+    entry_bits: np.ndarray
+    tables: tuple[np.ndarray, ...]
+
+    @property
+    def out_features(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def fan_in_max(self) -> int:
+        return self.indices.shape[1]
+
+    @property
+    def n_entries(self) -> int:
+        """Total table entries across the layer (the exact slab rows)."""
+        return int(sum(t.shape[0] for t in self.tables))
+
+
 def _entry_digits(entry_ids: jax.Array, fan_in: int, bw_in: int) -> jax.Array:
     """(E,) table indices -> (E, fan_in) per-element codes (LSB-first)."""
     shifts = bw_in * jnp.arange(fan_in, dtype=entry_ids.dtype)

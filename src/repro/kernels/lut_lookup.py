@@ -34,6 +34,18 @@ def pack_fan_in_entries(codes: jax.Array, idx: jax.Array,
     neuron's gathered codes into its table index.  Shared by this
     per-layer kernel and the fused whole-network kernel (lut_network).
     """
+    fan_in = idx.shape[1]
+    g = gather_fan_in_codes(codes, idx)                   # (bo, FI, bb)
+    shifts = bw_in * jax.lax.broadcasted_iota(jnp.int32, (fan_in, 1), 0)[:, 0]
+    return jnp.sum(g << shifts[None, :, None], axis=1)    # (bo, bb)
+
+
+def gather_fan_in_codes(codes: jax.Array, idx: jax.Array) -> jax.Array:
+    """(bb, I) codes + (bo, FI) indices -> (bo, FI, bb) gathered codes.
+
+    The fan-in gather as a one-hot MXU contraction — the shared first half
+    of both packing conventions (uniform shift and per-element shifts).
+    """
     bb, n_in = codes.shape
     bo, fan_in = idx.shape
     iota_i = jax.lax.broadcasted_iota(jnp.int32, (n_in, 1), 0)[:, 0]
@@ -42,9 +54,27 @@ def pack_fan_in_entries(codes: jax.Array, idx: jax.Array,
     g = jax.lax.dot(sel.reshape(bo * fan_in, n_in),
                     codes.astype(jnp.float32).T,
                     preferred_element_type=jnp.float32)
-    g = g.reshape(bo, fan_in, bb).astype(jnp.int32)
-    shifts = bw_in * jax.lax.broadcasted_iota(jnp.int32, (fan_in, 1), 0)[:, 0]
-    return jnp.sum(g << shifts[None, :, None], axis=1)    # (bo, bb)
+    return g.reshape(bo, fan_in, bb).astype(jnp.int32)
+
+
+def pack_fan_in_entries_mixed(codes: jax.Array, idx: jax.Array,
+                              shifts: jax.Array,
+                              widths: jax.Array) -> jax.Array:
+    """Mixed-width packing: per-(neuron, element) shifts instead of the
+    uniform ``bw_in * k`` ladder.
+
+    ``shifts``/``widths`` are (bo, FI) int32: element k of neuron j lands
+    at bits [shifts[j,k], shifts[j,k] + widths[j,k]) of its table entry.
+    A width of 0 marks a padded element (neurons below the layer's max
+    fan-in) — the mask zeroes its contribution entirely, which is what
+    lets the fused mixed-width kernel keep exact ``2^(sum widths)``-entry
+    tables with no padding rows.  Real elements always carry codes below
+    ``2^width`` (the producing layer's contract), so the mask is a no-op
+    for them.
+    """
+    g = gather_fan_in_codes(codes, idx)                    # (bo, FI, bb)
+    g = g & ((1 << widths) - 1)[:, :, None]
+    return jnp.sum(g << shifts[:, :, None], axis=1)        # (bo, bb)
 
 
 def _kernel(codes_ref, idx_ref, table_ref, out_ref, *, bw_in: int,
@@ -81,6 +111,10 @@ def lut_lookup_pallas(codes: jax.Array, indices: jax.Array, table: jax.Array,
     batch, n_in = codes.shape
     n_out, fan_in = indices.shape
     n_entries = table.shape[1]
+    if batch == 0:
+        # a zero-size grid (min(block_b, 0) == 0) is ill-formed; the empty
+        # result needs no kernel at all
+        return jnp.zeros((0, n_out), dtype=jnp.int32)
     block_b = min(block_b, batch)
     block_o = min(block_o, n_out)
     e_chunk = min(e_chunk, n_entries)

@@ -37,6 +37,29 @@ compare/select to a *two-level one-hot gather* (see ``_layer_step``): the
 bulk of the work becomes a batched matmul, which is where the fused
 engine's measured speedup over the per-layer path comes from on top of
 the saved HBM round trips.
+
+Mixed-width layout (``MixedNetworkSlabs`` / ``lut_network_mixed_pallas``)
+— the compiler-exact variant of the same engine.  ``repro.compile``'s
+dead-input pruning and level-3 re-encoding leave each neuron with its own
+per-element input widths and a compact ``2^(sum of widths)``-entry table;
+the uniform layout above would pad all of that back to the layer's widest
+feature and largest entry count.  The mixed slabs don't:
+
+  * ``idx_slab`` / ``shift_slab`` / ``width_slab`` (sum_l O_l, FI_max)
+    int32 — per-(neuron, element) fan-in indices, packed-entry bit
+    offsets, and element widths (0 marks fan-in padding), generalizing the
+    uniform ``bw_in * k`` shift ladder.
+  * ``table_slab`` (1, sum_j 2^entry_bits_j) int32 | int8 — every
+    neuron's table back to back, exactly ``2^(sum of its input widths)``
+    entries each; a neuron's row offset is static, so the packed slab
+    costs byte-for-byte what the netlist's ``table_bytes()`` accounting
+    proves.
+
+Within a layer neurons are grouped by entry count (equal-size tables
+reshape into one ``(group, E)`` block for the same batched two-level
+gather); the group sort permutes the layer's output bus, which the
+builder folds into the *next* layer's indices — only the final layer's
+permutation survives, undone in-kernel by one static one-hot matmul.
 """
 
 from __future__ import annotations
@@ -51,7 +74,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.lut_lookup import pack_fan_in_entries
+from repro.kernels.lut_lookup import (pack_fan_in_entries,
+                                      pack_fan_in_entries_mixed)
 
 
 class LayerMeta(NamedTuple):
@@ -114,6 +138,21 @@ def estimate_slab_bytes(layers: Sequence[tuple]) -> tuple[int, bool, bool]:
             + o_sum * e_max * table_itemsize), pack, f32_exact
 
 
+def _resolve_pack(byte_ok: bool, pack: bool | None) -> bool:
+    """One pack policy for both slab builders: None auto-packs when every
+    code fits an unsigned byte; an explicit True outside that range must
+    raise — the int8 store would silently wrap codes >= 256 (uint8 cast).
+    """
+    if pack is None:
+        return byte_ok
+    if pack and not byte_ok:
+        raise ValueError(
+            "pack=True stores table codes as unsigned bytes; these tables "
+            "hold codes outside [0, 256) — use pack=None (auto) or "
+            "pack=False")
+    return pack
+
+
 def build_network_slabs(layers: Sequence[tuple], *,
                         pack: bool | None = None) -> NetworkSlabs:
     """Pack per-layer ``(indices, table, bw_in)`` triples into fused slabs.
@@ -148,9 +187,9 @@ def build_network_slabs(layers: Sequence[tuple], *,
     e_max = max(m.n_entries for m in metas)
 
     idx_slab = np.zeros((o_sum, fi_max), dtype=np.int32)
-    if pack is None:
-        pack = all(int(t.max(initial=0)) < 256 and int(t.min(initial=0)) >= 0
-                   for t in tab_np)
+    pack = _resolve_pack(
+        all(int(t.max(initial=0)) < 256 and int(t.min(initial=0)) >= 0
+            for t in tab_np), pack)
     tab_dtype = np.int8 if pack else np.int32
     table_slab = np.zeros((o_sum, e_max), dtype=tab_dtype)
     row = 0
@@ -163,26 +202,24 @@ def build_network_slabs(layers: Sequence[tuple], *,
                         tuple(metas), bool(pack))
 
 
-def _layer_step(h: jax.Array, idx: jax.Array, table: jax.Array,
-                bw_in: int) -> jax.Array:
-    """One LUT layer on in-register codes: (bb, I) -> (bb, O).
+def _table_gather_two_level(entry: jax.Array, table: jax.Array,
+                            ent_bits: int) -> jax.Array:
+    """Gather table[o, entry[o, b]] for all (o, b): (bo, bb) -> (bb, bo).
 
     Unlike the per-layer ``lut_lookup`` kernel (which streams an
-    elementwise compare/select over all table entries), the table gather
-    here splits the packed entry index into low/high halves: the low half
-    is gathered with one *batched matmul* against its one-hot (MXU work),
+    elementwise compare/select over all table entries), the gather here
+    splits the packed entry index into low/high halves: the low half is
+    gathered with one *batched matmul* against its one-hot (MXU work),
     which collapses the entry axis from E to sqrt(E); the high half then
     costs only an O(B*O*sqrt(E)) elementwise select.  Same exact result —
     one-hot contractions on small ints are exact in f32 — at matmul
-    throughput instead of compare/select throughput.
+    throughput instead of compare/select throughput.  Shared by the
+    uniform and mixed-width fused kernels (the entry packing is what
+    differs between them).
     """
-    bo, fan_in = idx.shape
-    n_entries = table.shape[1]
-
-    entry = pack_fan_in_entries(h, idx, bw_in)               # (bo, bb)
+    bo, n_entries = table.shape
 
     # two-level one-hot gather: entry = hi * n_lo + lo
-    ent_bits = fan_in * bw_in
     lo_bits = ent_bits // 2
     n_lo = 1 << lo_bits
     n_hi = n_entries // n_lo
@@ -201,6 +238,14 @@ def _layer_step(h: jax.Array, idx: jax.Array, table: jax.Array,
     out = jnp.sum(jnp.where(jnp.transpose(oh_hi, (0, 2, 1)), part, 0.0),
                   axis=1)                                    # (bo, bb)
     return out.astype(jnp.int32).T                           # (bb, bo)
+
+
+def _layer_step(h: jax.Array, idx: jax.Array, table: jax.Array,
+                bw_in: int) -> jax.Array:
+    """One uniform-width LUT layer on in-register codes: (bb, I) -> (bb, O)."""
+    fan_in = idx.shape[1]
+    entry = pack_fan_in_entries(h, idx, bw_in)               # (bo, bb)
+    return _table_gather_two_level(entry, table, fan_in * bw_in)
 
 
 def _kernel(codes_ref, idx_ref, table_ref, out_ref, *,
@@ -225,6 +270,10 @@ def lut_network_pallas(codes: jax.Array, slabs: NetworkSlabs, *,
                        interpret: bool = False) -> jax.Array:
     """Whole sparse stack in one kernel: (batch, I0) -> (batch, O_last)."""
     batch, n_in = codes.shape
+    if batch == 0:
+        # a zero-size grid (min(block_b, 0) == 0) is ill-formed; the empty
+        # result needs no kernel at all
+        return jnp.zeros((0, slabs.n_out), dtype=jnp.int32)
     o_sum, fi_max = slabs.idx_slab.shape
     e_max = slabs.table_slab.shape[1]
     block_b = min(block_b, batch)
@@ -242,3 +291,242 @@ def lut_network_pallas(codes: jax.Array, slabs: NetworkSlabs, *,
         out_shape=jax.ShapeDtypeStruct((batch, slabs.n_out), jnp.int32),
         interpret=interpret,
     )(codes, slabs.idx_slab, slabs.table_slab)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-width fused path: compiler-exact slabs (no padding to the widest
+# feature / largest entry count) — see the module docstring's second half.
+# ---------------------------------------------------------------------------
+
+
+class MixedGroupMeta(NamedTuple):
+    """One equal-entry-count neuron group inside a layer (static)."""
+
+    n_out: int
+    entry_bits: int
+
+
+class MixedLayerMeta(NamedTuple):
+    """Static per-layer shape metadata for the mixed-width kernel."""
+
+    n_out: int
+    fan_in: int
+    groups: tuple[MixedGroupMeta, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedNetworkSlabs:
+    """A sparse stack packed at its exact compiled table footprint.
+
+    ``out_perm`` is the static gather that undoes the final layer's
+    group-sort: ``result[:, j] == kernel_bus[:, out_perm[j]]`` (None when
+    the sort was the identity).  Intermediate layers need no fixup — the
+    builder rewrote each layer's fan-in indices against its producer's
+    permuted bus.
+    """
+
+    idx_slab: jax.Array      # (sum_l O_l, FI_max) int32
+    shift_slab: jax.Array    # (sum_l O_l, FI_max) int32
+    width_slab: jax.Array    # (sum_l O_l, FI_max) int32
+    table_slab: jax.Array    # (1, sum_j 2^entry_bits_j) int32 | int8
+    meta: tuple[MixedLayerMeta, ...]
+    out_perm: tuple[int, ...] | None
+    packed: bool
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.meta)
+
+    @property
+    def n_out(self) -> int:
+        return self.meta[-1].n_out
+
+    def vmem_bytes(self) -> int:
+        return sum(s.size * s.dtype.itemsize
+                   for s in (self.idx_slab, self.shift_slab,
+                             self.width_slab, self.table_slab))
+
+    def vmem_breakdown(self) -> dict:
+        """Per-slab VMEM bytes (bench / fused-fallback diagnostics).
+
+        ``table_slab_bytes`` is the headline: with ``packed_int8`` it
+        equals the netlist's exact per-neuron ``table_bytes()`` accounting
+        for codes <= 8 bits — the fused path banks byte-for-byte what the
+        compiler proved.
+        """
+        idx = self.idx_slab.size * self.idx_slab.dtype.itemsize
+        sh = self.shift_slab.size * self.shift_slab.dtype.itemsize
+        wd = self.width_slab.size * self.width_slab.dtype.itemsize
+        tab = self.table_slab.size * self.table_slab.dtype.itemsize
+        return {"idx_slab_bytes": idx, "shift_slab_bytes": sh,
+                "width_slab_bytes": wd, "table_slab_bytes": tab,
+                "total_bytes": idx + sh + wd + tab,
+                "packed_int8": self.packed, "layout": "mixed"}
+
+
+def _mixed_lo_hi(layers) -> tuple[int, int]:
+    lo = min((int(t.min()) for L in layers for t in L.tables if t.size),
+             default=0)
+    hi = max((int(t.max()) for L in layers for t in L.tables if t.size),
+             default=0)
+    return lo, hi
+
+
+def estimate_mixed_slab_bytes(layers) -> tuple[int, bool, bool]:
+    """Projected mixed-slab footprint, int8-pack and f32-exact eligibility.
+
+    ``layers`` is a ``MixedLayerTables`` sequence (``repro.compile``'s
+    ``CNet.to_mixed_tables`` lowering).  The table slab costs exactly the
+    stack's total table entries (1 or 4 bytes each); the metadata adds
+    three (sum O, FI_max) int32 slabs (indices, shifts, widths).  Same
+    contract as ``estimate_slab_bytes``: lets ``ops.fused_plan`` decide
+    before any slab is built.
+    """
+    o_sum = sum(L.indices.shape[0] for L in layers)
+    fi_max = max(L.indices.shape[1] for L in layers)
+    entries = sum(L.n_entries for L in layers)
+    lo, hi = _mixed_lo_hi(layers)
+    pack = lo >= 0 and hi < 256
+    f32_exact = lo >= 0 and hi < 1 << 24
+    return (3 * o_sum * fi_max * 4
+            + entries * (1 if pack else 4)), pack, f32_exact
+
+
+def build_mixed_network_slabs(layers, *,
+                              pack: bool | None = None) -> MixedNetworkSlabs:
+    """Pack ``MixedLayerTables`` into compiler-exact fused slabs.
+
+    Host-side (numpy).  Within each layer, neurons are stably sorted by
+    entry count so equal-size tables form contiguous groups (one batched
+    two-level gather each); the sort permutes the layer's output bus, so
+    the next layer's fan-in indices are rewritten against the permuted
+    order and only the final layer's permutation is kept (``out_perm``)
+    for the kernel to undo.  ``pack`` follows ``build_network_slabs``:
+    None auto-packs to int8 when every code fits a byte, True validates
+    the byte range and raises instead of wrapping.
+    """
+    layers = list(layers)
+    if not layers:
+        raise ValueError("fused network needs at least one layer")
+    lo, hi = _mixed_lo_hi(layers)
+    if hi >= 1 << 24 or lo < 0:
+        raise ValueError(
+            "fused kernel gathers tables through exact f32 one-hot "
+            "contractions; output codes must be in [0, 2^24) — use the "
+            "per-layer path (fused=False) for wider codes")
+    pack = _resolve_pack(lo >= 0 and hi < 256, pack)
+
+    fi_max = max(L.indices.shape[1] for L in layers)
+    metas = []
+    idx_rows, shift_rows, width_rows, flat_parts = [], [], [], []
+    inv_prev: np.ndarray | None = None   # prev bus: old feature -> new pos
+    for L in layers:
+        o = L.indices.shape[0]
+        fi = L.indices.shape[1]
+        idx = np.asarray(L.indices, dtype=np.int32)
+        if inv_prev is not None:
+            idx = inv_prev[idx].astype(np.int32)
+        eb = np.asarray(L.entry_bits, dtype=np.int64)
+        order = np.argsort(eb, kind="stable")
+        idx = idx[order]
+        shifts = np.asarray(L.shifts, dtype=np.int32)[order]
+        widths = np.asarray(L.elem_widths, dtype=np.int32)[order]
+        eb = eb[order]
+        groups = []
+        start = 0
+        for j in range(1, o + 1):
+            if j == o or eb[j] != eb[start]:
+                groups.append(MixedGroupMeta(j - start, int(eb[start])))
+                start = j
+        for j, src in enumerate(order):
+            t = np.asarray(L.tables[src], dtype=np.int32)
+            if t.shape[0] != 1 << int(eb[j]):
+                raise ValueError(
+                    f"neuron table has {t.shape[0]} entries; its element "
+                    f"widths sum to {int(eb[j])} bits and require "
+                    f"2^{int(eb[j])}")
+            flat_parts.append(t)
+        pad = np.zeros((o, fi_max - fi), dtype=np.int32)
+        idx_rows.append(np.concatenate([idx, pad], axis=1))
+        shift_rows.append(np.concatenate([shifts, pad], axis=1))
+        width_rows.append(np.concatenate([widths, pad], axis=1))
+        metas.append(MixedLayerMeta(o, fi, tuple(groups)))
+        inv_prev = np.argsort(order)
+    flat = np.concatenate(flat_parts)
+    if pack:
+        flat = flat.astype(np.uint8).view(np.int8)
+    out_perm = (None if np.array_equal(inv_prev, np.arange(len(inv_prev)))
+                else tuple(int(p) for p in inv_prev))
+    return MixedNetworkSlabs(
+        jnp.asarray(np.concatenate(idx_rows)),
+        jnp.asarray(np.concatenate(shift_rows)),
+        jnp.asarray(np.concatenate(width_rows)),
+        jnp.asarray(flat[None, :]),
+        tuple(metas), out_perm, bool(pack))
+
+
+def _mixed_kernel(codes_ref, idx_ref, shift_ref, width_ref, table_ref,
+                  out_ref, *, meta: tuple[MixedLayerMeta, ...],
+                  packed: bool, out_perm: tuple[int, ...] | None):
+    h = codes_ref[...]                                       # (bb, I0)
+    # Static unroll over layers and, within a layer, over equal-entry-count
+    # neuron groups: each group reads its exact row/flat-offset slices (all
+    # compile-time constants) and runs the same batched two-level gather as
+    # the uniform kernel — activation codes never leave VMEM.
+    row = 0
+    flat = 0
+    for m in meta:
+        parts = []
+        for g in m.groups:
+            idx = idx_ref[row:row + g.n_out, :m.fan_in]
+            sh = shift_ref[row:row + g.n_out, :m.fan_in]
+            wd = width_ref[row:row + g.n_out, :m.fan_in]
+            n_e = 1 << g.entry_bits
+            table = table_ref[0, flat:flat + g.n_out * n_e].reshape(
+                g.n_out, n_e)
+            if packed:
+                table = table.astype(jnp.int32) & 0xFF
+            entry = pack_fan_in_entries_mixed(h, idx, sh, wd)
+            parts.append(_table_gather_two_level(entry, table,
+                                                 g.entry_bits))
+            row += g.n_out
+            flat += g.n_out * n_e
+        h = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    if out_perm is not None:
+        # undo the final layer's group-sort: a static column shuffle
+        # (compile-time slice per output) — Pallas kernels cannot capture
+        # array constants, and a dynamic gather would be the slow path on
+        # TPU anyway
+        h = jnp.concatenate([h[:, p:p + 1] for p in out_perm], axis=1)
+    out_ref[...] = h
+
+
+def lut_network_mixed_pallas(codes: jax.Array, slabs: MixedNetworkSlabs, *,
+                             block_b: int = 128,
+                             interpret: bool = False) -> jax.Array:
+    """Whole sparse stack, compiler-exact slabs: (batch, I0) -> (batch, O)."""
+    batch, n_in = codes.shape
+    if batch == 0:
+        # same empty-batch edge as lut_network_pallas: no kernel to launch
+        return jnp.zeros((0, slabs.n_out), dtype=jnp.int32)
+    o_sum, fi_max = slabs.idx_slab.shape
+    t_total = slabs.table_slab.shape[1]
+    block_b = min(block_b, batch)
+    grid = (pl.cdiv(batch, block_b),)
+
+    return pl.pallas_call(
+        functools.partial(_mixed_kernel, meta=slabs.meta,
+                          packed=slabs.packed, out_perm=slabs.out_perm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n_in), lambda b: (b, 0)),
+            pl.BlockSpec((o_sum, fi_max), lambda b: (0, 0)),
+            pl.BlockSpec((o_sum, fi_max), lambda b: (0, 0)),
+            pl.BlockSpec((o_sum, fi_max), lambda b: (0, 0)),
+            pl.BlockSpec((1, t_total), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, slabs.n_out), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, slabs.n_out), jnp.int32),
+        interpret=interpret,
+    )(codes, slabs.idx_slab, slabs.shift_slab, slabs.width_slab,
+      slabs.table_slab)

@@ -17,8 +17,11 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.lut_lookup import lut_lookup_pallas
-from repro.kernels.lut_network import (build_network_slabs,
+from repro.kernels.lut_network import (build_mixed_network_slabs,
+                                       build_network_slabs,
+                                       estimate_mixed_slab_bytes,
                                        estimate_slab_bytes,
+                                       lut_network_mixed_pallas,
                                        lut_network_pallas)
 from repro.kernels.masked_matmul import masked_matmul_pallas
 
@@ -39,9 +42,14 @@ class FusedPlan:
 
     ``reason`` is one of ``"fused"`` (eligible), ``"slab_exceeds_vmem_budget"``
     or ``"codes_exceed_f32_exact_range"`` — the two fallback causes the
-    kernel enforces.  The bench records this next to its timings so a
-    regression gate can tell "fused fell back" apart from "fused got
-    slower" (see benchmarks/kernel_bench.py).
+    kernel enforces.  ``layout`` records which slab layout was costed:
+    ``"uniform"`` for ``(indices, table, bw_in)`` triples, ``"mixed"`` for
+    the compiler's compact ``MixedLayerTables`` lowering (whose table slab
+    holds exactly ``2^(sum of input widths)`` entries per neuron, so
+    stacks that overflow the budget uniformly can still fuse).  The bench
+    records this next to its timings so a regression gate can tell "fused
+    fell back" apart from "fused got slower" (see
+    benchmarks/kernel_bench.py).
     """
 
     fused: bool
@@ -50,6 +58,7 @@ class FusedPlan:
     vmem_budget_bytes: int
     pack: bool
     f32_exact: bool
+    layout: str = "uniform"
 
     def as_dict(self) -> dict:
         # headroom rides along so artifact consumers get the slab-vs-budget
@@ -64,9 +73,17 @@ def fused_plan(layers, vmem_budget_bytes: int = FUSED_VMEM_BUDGET_BYTES
 
     The single source of truth for the decision ``lut_network`` makes:
     projected slab bytes must fit the VMEM budget and every output code
-    must be exact under the kernel's f32 one-hot gathers.
+    must be exact under the kernel's f32 one-hot gathers.  ``layers`` is
+    either the uniform ``(indices, table, bw_in)`` triple list or the
+    compiler's ``MixedLayerTables`` lowering (``CNet.to_mixed_tables``);
+    the latter is costed at its exact compact footprint, which is what
+    lets compiler-shrunk stacks that would overflow the budget uniformly
+    become fused-eligible.
     """
-    est_bytes, pack, f32_exact = estimate_slab_bytes(layers)
+    layers = list(layers)
+    mixed = bool(layers) and hasattr(layers[0], "entry_bits")
+    estimate = estimate_mixed_slab_bytes if mixed else estimate_slab_bytes
+    est_bytes, pack, f32_exact = estimate(layers)
     if not f32_exact:
         fused, reason = False, "codes_exceed_f32_exact_range"
     elif est_bytes > vmem_budget_bytes:
@@ -74,16 +91,25 @@ def fused_plan(layers, vmem_budget_bytes: int = FUSED_VMEM_BUDGET_BYTES
     else:
         fused, reason = True, "fused"
     return FusedPlan(fused, reason, est_bytes, vmem_budget_bytes,
-                     pack, f32_exact)
+                     pack, f32_exact, "mixed" if mixed else "uniform")
 
 
-@functools.partial(jax.jit, static_argnames=("bw_in", "use_pallas"))
+@functools.partial(jax.jit,
+                   static_argnames=("bw_in", "use_pallas", "block_b"))
 def lut_lookup(codes: jax.Array, indices: jax.Array, table: jax.Array,
-               bw_in: int, use_pallas: bool = True) -> jax.Array:
-    """LogicNets LUT-layer inference: (B, I) codes -> (B, O) codes."""
+               bw_in: int, use_pallas: bool = True,
+               block_b: int = 128) -> jax.Array:
+    """LogicNets LUT-layer inference: (B, I) codes -> (B, O) codes.
+
+    Jit'd with a shape/static-arg cache: repeated calls on the same layer
+    shapes reuse the traced kernel — which is why ``lut_network``'s
+    per-layer fallback must route through this wrapper rather than calling
+    ``lut_lookup_pallas`` directly (the bare call re-traces every layer on
+    every invocation).
+    """
     if not use_pallas:
         return ref.lut_lookup_ref(codes, indices, table, bw_in)
-    return lut_lookup_pallas(codes, indices, table, bw_in,
+    return lut_lookup_pallas(codes, indices, table, bw_in, block_b=block_b,
                              interpret=not _on_tpu())
 
 
@@ -104,19 +130,39 @@ def lut_network(codes: jax.Array, layers, *, fused: bool = True,
     ``optimize_level`` (0-3) runs the truth-table compiler
     (``repro.compile``) over the stack first: smaller slabs mean stacks
     that used to overflow ``vmem_budget_bytes`` can take the fused path,
-    and the output stays bit-identical on every reachable input.  Level 3
-    adds cross-layer code re-encoding — when it narrows a bus's *widest*
-    feature the lowered uniform tables shrink 2^fan_in-fold per saved bit.
+    and the output stays bit-identical on every reachable input.  The
+    fused path then consumes the compiler's *mixed-width* lowering
+    (``CNet.to_mixed_tables``) directly — per-(neuron, element) shift
+    slabs and exact ``2^(sum of input widths)``-entry tables, so
+    dead-input pruning and level-3 re-encoding bank their full table-byte
+    savings as VMEM instead of being padded back to each bus's widest
+    feature.
 
     Slabs are rebuilt (host-side numpy) and the kernel re-traced on every
     call — fine for verification and batch scoring; a throughput serving
-    loop should instead ``build_network_slabs`` once and jit a closure
-    over ``lut_network_pallas`` (see benchmarks/kernel_bench.py).
+    loop should instead build the slabs once and jit a closure over
+    ``lut_network_pallas`` / ``lut_network_mixed_pallas`` (see
+    benchmarks/kernel_bench.py).
     """
+    res = None
     if optimize_level is not None:
-        from repro.compile import optimize_triples
-        layers = optimize_triples(layers, optimize_level,
-                                  in_features=codes.shape[-1])
+        from repro.compile import optimize, tables_from_triples
+        res = optimize(tables_from_triples(layers), optimize_level,
+                       in_features=codes.shape[-1])
+    if res is not None and use_pallas and fused:
+        mixed = res.mixed_tables
+        plan = fused_plan(mixed, vmem_budget_bytes)
+        if plan.fused:
+            slabs = build_mixed_network_slabs(mixed, pack=plan.pack)
+            return lut_network_mixed_pallas(codes, slabs, block_b=block_b,
+                                            interpret=not _on_tpu())
+        # fall through: the uniform layout is re-costed below (it can be
+        # smaller only in the degenerate tiny-table/huge-fan-in regime
+        # where the three metadata slabs dominate)
+    if res is not None:
+        # the padded uniform lowering is only materialized once the mixed
+        # fused path has been ruled out
+        layers = [(tt.indices, tt.table, tt.bw_in) for tt in res.tables]
     if not use_pallas:
         c = codes
         for indices, table, bw_in in layers:
@@ -131,9 +177,8 @@ def lut_network(codes: jax.Array, layers, *, fused: bool = True,
                                       interpret=not _on_tpu())
     c = codes
     for indices, table, bw_in in layers:
-        c = lut_lookup_pallas(c, jnp.asarray(indices), jnp.asarray(table),
-                              int(bw_in), block_b=block_b,
-                              interpret=not _on_tpu())
+        c = lut_lookup(c, jnp.asarray(indices), jnp.asarray(table),
+                       int(bw_in), block_b=block_b)
     return c
 
 

@@ -20,8 +20,8 @@ from benchmarks.kernel_bench import (BASELINE_PATH,  # noqa: E402
 
 
 def _payload(speedup=2.5, l2_pct=17.2, l2_bytes=53912, l3_pct=17.2,
-             l3_bytes=37504, l3_bits_saved=105, mode="smoke",
-             backend="cpu"):
+             l3_bytes=37504, l3_bits_saved=105, l3_mixed_bytes=43228,
+             l3_mixed_speedup=2.2, mode="smoke", backend="cpu"):
     """Bench-JSON shape with only the gated quantities filled in."""
     return {
         "mode": mode,
@@ -34,6 +34,8 @@ def _payload(speedup=2.5, l2_pct=17.2, l2_bytes=53912, l3_pct=17.2,
                 "slab_reduction_pct": l3_pct,
                 "stats": {"table_bytes_after": l3_bytes,
                           "bits_saved": l3_bits_saved},
+                "mixed_slab_bytes": l3_mixed_bytes,
+                "mixed_fused_speedup": l3_mixed_speedup,
             },
         },
     }
@@ -72,6 +74,36 @@ def test_gate_fails_when_reencoding_stops_firing():
     assert any("bits_saved" in f for f in failures), failures
 
 
+def test_gate_fails_on_mixed_slab_regression():
+    # the compact mixed slab creeping back toward the padded uniform
+    # figure (a lowering/builder regression) must trip the gate
+    baseline = baseline_from_payload(_payload())
+    failures = check_against_baseline(_payload(l3_mixed_bytes=83316),
+                                      baseline)
+    assert any("mixed_slab_bytes" in f for f in failures), failures
+
+
+def test_gate_fails_on_mixed_speedup_regression():
+    # the mixed timing ratio carries a wide 50% interpret-mode tolerance
+    # (the byte ceiling is the sharp gate); a collapse below half the
+    # baseline must still trip
+    baseline = baseline_from_payload(_payload(l3_mixed_speedup=5.0))
+    failures = check_against_baseline(_payload(l3_mixed_speedup=2.0),
+                                      baseline)
+    assert any("mixed_fused_speedup" in f for f in failures), failures
+    assert check_against_baseline(_payload(l3_mixed_speedup=2.6),
+                                  baseline) == []
+
+
+def test_gate_tolerates_pre_mixed_baseline():
+    # a baseline recorded before the mixed-width fields existed must not
+    # fail the gate on the new quantities
+    baseline = baseline_from_payload(_payload())
+    del baseline["compile"]["level3"]["mixed_slab_bytes"]
+    del baseline["compile"]["level3"]["mixed_fused_speedup"]
+    assert check_against_baseline(_payload(), baseline) == []
+
+
 def test_gate_refuses_protocol_mismatch():
     # a full-mode or TPU run is not comparable with the smoke/cpu baseline
     baseline = baseline_from_payload(_payload())
@@ -104,6 +136,14 @@ def test_committed_baseline_is_well_formed():
     comp = baseline["compile"]
     assert comp["table_bytes_after"] > comp["level3"]["table_bytes_after"]
     assert comp["level3"]["bits_saved"] > 0
+    # the ISSUE-4 acceptance shape: the mixed fused slab (tables + the
+    # three small metadata slabs) sits near the exact level-3 packed
+    # table bytes, far below the level-2 uniform figure, and the mixed
+    # kernel beats the per-layer path
+    l3 = comp["level3"]
+    assert l3["mixed_slab_bytes"] < 1.25 * l3["table_bytes_after"]
+    assert l3["mixed_slab_bytes"] < comp["table_bytes_after"]
+    assert l3["mixed_fused_speedup"] > 1.0
     # a run reproducing exactly the baseline numbers passes the gate
     payload = _payload(
         speedup=baseline["fused_speedup"],
@@ -111,5 +151,7 @@ def test_committed_baseline_is_well_formed():
         l2_bytes=comp["table_bytes_after"],
         l3_pct=comp["level3"]["slab_reduction_pct"],
         l3_bytes=comp["level3"]["table_bytes_after"],
-        l3_bits_saved=comp["level3"]["bits_saved"])
+        l3_bits_saved=comp["level3"]["bits_saved"],
+        l3_mixed_bytes=l3["mixed_slab_bytes"],
+        l3_mixed_speedup=l3["mixed_fused_speedup"])
     assert check_against_baseline(payload, baseline) == []

@@ -82,6 +82,73 @@ def test_packed_and_unpacked_paths_agree():
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_explicit_pack_wide_codes_raise():
+    """Regression: pack=True used to uint8-wrap codes >= 256 into corrupt
+    tables silently; it must refuse the out-of-range request instead."""
+    layers = _random_stack((8, 8, 8), (2, 2), (2, 2), seed=2)
+    idx, tab, bw = layers[-1]
+    layers[-1] = (idx, tab + 300, bw)
+    with pytest.raises(ValueError, match="pack=True"):
+        build_network_slabs(layers, pack=True)
+    # in-range tables still pack explicitly, bit-exactly
+    layers = _random_stack((8, 8, 8), (2, 2), (2, 2), seed=2)
+    slabs = build_network_slabs(layers, pack=True)
+    assert slabs.packed
+    codes = jnp.asarray(np.random.default_rng(0).integers(
+        0, 4, (9, 8), dtype=np.int32))
+    got = lut_network_pallas(codes, slabs, block_b=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(_ref_forward(codes, layers)))
+
+
+def test_empty_and_ragged_batch_edges():
+    """Regression: batch == 0 used to build a zero-size grid via
+    min(block_b, 0); both kernels must return an empty result instead, and
+    a batch that is not a multiple of block_b must mask correctly."""
+    from repro.kernels.lut_lookup import lut_lookup_pallas
+
+    layers = _random_stack((8, 12, 6), (2, 2), (2, 2), seed=6)
+    slabs = build_network_slabs(layers)
+    empty = lut_network_pallas(jnp.zeros((0, 8), jnp.int32), slabs,
+                               interpret=True)
+    assert empty.shape == (0, 6) and empty.dtype == jnp.int32
+    idx, tab, bw = layers[0]
+    empty = lut_lookup_pallas(jnp.zeros((0, 8), jnp.int32),
+                              jnp.asarray(idx), jnp.asarray(tab), bw,
+                              interpret=True)
+    assert empty.shape == (0, 12) and empty.dtype == jnp.int32
+    # ops-level: both the fused route and the per-layer fallback
+    empty = lut_network(jnp.zeros((0, 8), jnp.int32), layers)
+    assert empty.shape == (0, 6)
+    empty = lut_network(jnp.zeros((0, 8), jnp.int32), layers, fused=False)
+    assert empty.shape == (0, 6)
+    # ragged batch: 11 rows through block_b=8 needs a masked final block
+    codes = jnp.asarray(np.random.default_rng(3).integers(
+        0, 4, (11, 8), dtype=np.int32))
+    got = lut_network_pallas(codes, slabs, block_b=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(_ref_forward(codes, layers)))
+
+
+def test_per_layer_fallback_reuses_jit_cache():
+    """Regression: the per-layer fallback used to call lut_lookup_pallas
+    directly, re-tracing every layer on every call; routed through the
+    jit'd lut_lookup wrapper, repeated calls must add no cache entries."""
+    from repro.kernels import ops
+
+    layers = _random_stack((8, 10, 6), (2, 2), (2, 2), seed=12)
+    codes = jnp.asarray(np.random.default_rng(5).integers(
+        0, 4, (7, 8), dtype=np.int32))
+    want = np.asarray(_ref_forward(codes, layers))
+    got = lut_network(codes, layers, fused=False)   # traces each layer once
+    np.testing.assert_array_equal(np.asarray(got), want)
+    before = ops.lut_lookup._cache_size()
+    for _ in range(3):
+        got = lut_network(codes, layers, fused=False)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    assert ops.lut_lookup._cache_size() == before
+
+
 def test_auto_pack_declines_wide_codes():
     """Tables holding codes >= 256 must not be byte-packed."""
     layers = _random_stack((8, 8, 8), (2, 2), (2, 2), seed=2)

@@ -1,0 +1,348 @@
+"""Mixed-width fused LUT kernel: compiler-exact slabs vs every other path.
+
+The contract under test: ``lut_network_mixed_pallas`` over
+``CNet.to_mixed_tables()`` slabs is bit-exact with the per-layer jnp
+reference, the uniform fused kernel, and the emitted Verilog — while its
+table slab costs exactly the bytes the compiler's per-neuron accounting
+proves (no padding to the widest feature or largest entry count).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st  # real when installed
+
+from repro import compile as C
+from repro.core import logicnet as LN
+from repro.core.table_infer import network_table_forward
+from repro.kernels import ref
+from repro.kernels.lut_network import (build_mixed_network_slabs,
+                                       build_network_slabs,
+                                       estimate_mixed_slab_bytes,
+                                       lut_network_mixed_pallas,
+                                       lut_network_pallas)
+from repro.kernels.ops import fused_plan, lut_network
+
+
+def _random_stack(widths, fan_ins, bws, seed=0):
+    rng = np.random.default_rng(seed)
+    layers = []
+    for (n_in, n_out), fi, bw in zip(zip(widths[:-1], widths[1:]),
+                                     fan_ins, bws):
+        fi = min(fi, n_in)
+        idx = np.stack([np.sort(rng.choice(n_in, fi, replace=False))
+                        for _ in range(n_out)]).astype(np.int32)
+        tab = rng.integers(0, 2 ** bw, (n_out, 2 ** (fi * bw)),
+                           dtype=np.int32)
+        layers.append((idx, tab, bw))
+    return layers
+
+
+def _het_fan_in_stack(widths, bws, fan_in_choices, seed=0):
+    """A stack whose *per-neuron* fan-ins differ — ragged entry counts.
+
+    Uniform ``LayerTruthTable`` cannot express this, so it is built as a
+    ``CNet`` directly (the IR the compiler's passes produce); the uniform
+    lowering pads it back, the mixed lowering keeps it exact.
+    """
+    rng = np.random.default_rng(seed)
+    layers = []
+    for li, ((n_in, n_out), bw) in enumerate(zip(zip(widths[:-1],
+                                                     widths[1:]), bws)):
+        neurons = []
+        for _ in range(n_out):
+            fi = min(int(rng.choice(fan_in_choices)), n_in)
+            idx = np.sort(rng.choice(n_in, fi, replace=False)).astype(
+                np.int32)
+            bw_out = bws[li + 1] if li + 1 < len(bws) else bw
+            tab = rng.integers(0, 2 ** bw_out, 2 ** (fi * bw),
+                               dtype=np.int32)
+            neurons.append(C.CNeuron(idx, tab))
+        bw_out = bws[li + 1] if li + 1 < len(bws) else bw
+        layers.append(C.CLayer(neurons, bw, bw_out))
+    net = C.CNet(widths[0], layers)
+    net.validate()
+    return net
+
+
+def _ref_forward(codes, layers):
+    c = codes
+    for idx, tab, bw in layers:
+        c = ref.lut_lookup_ref(c, jnp.asarray(idx), jnp.asarray(tab), bw)
+    return c
+
+
+def test_mixed_matches_reference_on_heterogeneous_fan_ins():
+    """Ragged per-neuron fan-ins: mixed slabs are exact, smaller, bit-equal."""
+    net = _het_fan_in_stack((10, 16, 12, 8), (2, 2, 2), (1, 2, 3), seed=3)
+    mixed = net.to_mixed_tables()
+    slabs = build_mixed_network_slabs(mixed)
+    uni = build_network_slabs(
+        [(tt.indices, tt.table, tt.bw_in) for tt in net.to_tables()])
+    # the uniform layout pads every neuron to the layer's max fan-in; the
+    # mixed table slab stores exactly sum_j 2^(sum of widths_j) entries
+    assert (slabs.vmem_breakdown()["table_slab_bytes"]
+            < uni.vmem_breakdown()["table_slab_bytes"])
+    codes = jnp.asarray(np.random.default_rng(0).integers(
+        0, 4, (23, 10), dtype=np.int32))
+    want = C.forward_codes(net, np.asarray(codes))
+    got = lut_network_mixed_pallas(codes, slabs, block_b=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    got_uni = lut_network_pallas(codes, uni, block_b=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_uni), want)
+
+
+def test_mixed_group_sort_restores_output_order():
+    """A final layer with interleaved entry counts forces a non-trivial
+    out_perm; the kernel's static column shuffle must undo it exactly."""
+    net = _het_fan_in_stack((8, 8, 9), (2, 2), (1, 3), seed=17)
+    # interleave fan-ins by hand so the stable sort is not the identity
+    lay = net.layers[-1]
+    fis = [n.fan_in for n in lay.neurons]
+    assert len(set(fis)) > 1, "seed must give mixed fan-ins"
+    slabs = build_mixed_network_slabs(net.to_mixed_tables())
+    assert slabs.out_perm is not None
+    codes = jnp.asarray(np.random.default_rng(5).integers(
+        0, 4, (11, 8), dtype=np.int32))
+    want = C.forward_codes(net, np.asarray(codes))
+    got = lut_network_mixed_pallas(codes, slabs, block_b=4, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_mixed_packed_boundary_codes():
+    """Packed-int8 boundary codes 0/255 must survive the uint8 view and the
+    in-kernel widening mask on both the packed and unpacked paths."""
+    layers = _random_stack((8, 10, 6), (2, 2), (2, 2), seed=9)
+    idx, tab, bw = layers[-1]
+    layers[-1] = (idx, (tab % 2) * 255, bw)     # outputs are exactly {0, 255}
+    tables = C.tables_from_triples(layers)
+    net = C.CNet.from_tables(tables, in_features=8)
+    mixed = net.to_mixed_tables()
+    codes = jnp.asarray(np.random.default_rng(2).integers(
+        0, 4, (19, 8), dtype=np.int32))
+    want = np.asarray(_ref_forward(codes, layers))
+    assert set(np.unique(want)) <= {0, 255}
+
+    packed = build_mixed_network_slabs(mixed, pack=True)
+    unpacked = build_mixed_network_slabs(mixed, pack=False)
+    assert packed.packed and packed.table_slab.dtype == jnp.int8
+    assert not unpacked.packed and unpacked.table_slab.dtype == jnp.int32
+    assert packed.vmem_bytes() < unpacked.vmem_bytes()
+    for slabs in (packed, unpacked):
+        got = lut_network_mixed_pallas(codes, slabs, block_b=8,
+                                       interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_mixed_pack_true_wide_codes_raise():
+    """Explicit pack=True with codes >= 256 must raise, not wrap (the same
+    contract as build_network_slabs after the uint8-wraparound fix)."""
+    layers = _random_stack((6, 6), (2,), (2,), seed=4)
+    idx, tab, bw = layers[0]
+    layers[0] = (idx, tab + 300, bw)
+    net = C.CNet.from_tables(C.tables_from_triples(layers), in_features=6)
+    mixed = net.to_mixed_tables()
+    with pytest.raises(ValueError, match="pack=True"):
+        build_mixed_network_slabs(mixed, pack=True)
+    slabs = build_mixed_network_slabs(mixed)      # auto declines packing
+    assert not slabs.packed
+
+
+def test_mixed_empty_and_ragged_batch():
+    net = _het_fan_in_stack((6, 8, 5), (2, 2), (1, 2), seed=1)
+    slabs = build_mixed_network_slabs(net.to_mixed_tables())
+    empty = lut_network_mixed_pallas(jnp.zeros((0, 6), jnp.int32), slabs,
+                                     interpret=True)
+    assert empty.shape == (0, 5) and empty.dtype == jnp.int32
+    codes = jnp.asarray(np.random.default_rng(8).integers(
+        0, 4, (13, 6), dtype=np.int32))          # 13 % block_b != 0
+    want = C.forward_codes(net, np.asarray(codes))
+    got = lut_network_mixed_pallas(codes, slabs, block_b=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_fused_plan_mixed_unlocks_overflowing_stack():
+    """A stack whose uniform slabs overflow the VMEM budget but whose
+    compact mixed slabs fit must take the fused path via optimize_level."""
+    rng = np.random.default_rng(7)
+    n_in, n_out, bw = 12, 24, 2
+    # one wide neuron (fan-in 6 -> 4096 entries) among single-input ones:
+    # the uniform layout pads all 24 neurons to 4096 entries each
+    neurons = []
+    for j in range(n_out):
+        fi = 6 if j == 0 else 1
+        idx = np.sort(rng.choice(n_in, fi, replace=False)).astype(np.int32)
+        tab = rng.integers(0, 2 ** bw, 2 ** (fi * bw), dtype=np.int32)
+        neurons.append(C.CNeuron(idx, tab))
+    net = C.CNet(n_in, [C.CLayer(neurons, bw, bw)])
+    net.validate()
+    uniform = [(tt.indices, tt.table, tt.bw_in) for tt in net.to_tables()]
+    mixed = net.to_mixed_tables()
+    budget = 40_000     # between the two footprints
+    u_plan = fused_plan(uniform, budget)
+    m_plan = fused_plan(mixed, budget)
+    assert not u_plan.fused and u_plan.reason == "slab_exceeds_vmem_budget"
+    assert m_plan.fused and m_plan.layout == "mixed"
+    assert m_plan.slab_bytes < u_plan.slab_bytes
+
+    est_bytes, pack, f32 = estimate_mixed_slab_bytes(mixed)
+    slabs = build_mixed_network_slabs(mixed, pack=pack)
+    assert est_bytes == slabs.vmem_bytes() and pack and f32
+
+    codes = jnp.asarray(rng.integers(0, 2 ** bw, (9, n_in), dtype=np.int32))
+    want = C.forward_codes(net, np.asarray(codes))
+    got = lut_network_mixed_pallas(codes, slabs, block_b=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_lut_network_routes_optimize_level_through_mixed():
+    """ops.lut_network(optimize_level=...) must execute the compact slabs
+    and stay bit-exact with the raw per-layer reference."""
+    layers = _random_stack((12, 20, 16, 8), (3, 3, 3), (2, 2, 2), seed=13)
+    codes = jnp.asarray(np.random.default_rng(1).integers(
+        0, 4, (27, 12), dtype=np.int32))
+    want = np.asarray(_ref_forward(codes, layers))
+    for level in (1, 2, 3):
+        got = np.asarray(lut_network(codes, layers, optimize_level=level))
+        np.testing.assert_array_equal(got, want)
+    # and through the core API (the deployment entry points)
+    tables = C.tables_from_triples(layers)
+    got = np.asarray(network_table_forward(tables, codes, fused=True,
+                                           optimize_level=3))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_mixed_slab_banks_compiler_bytes_on_model_a():
+    """Acceptance: on the generated fpga4hep model A stack at level 3 the
+    fused table slab costs within 10% of the netlist's exact packed bytes
+    (37504 B on the reference build, ~98304 B uniform), bit-exactly."""
+    from repro.configs import fpga4hep
+
+    cfg = fpga4hep.model_a()
+    model = LN.init(cfg, jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (256, cfg.in_features),
+                           minval=-1, maxval=3)
+    _, model = LN.forward(cfg, model, x, train=True)
+    tables = LN.generate_tables(cfg, model)
+    res = C.optimize(tables, level=3, in_features=cfg.in_features)
+
+    exact_bytes = res.cnet.table_bytes()
+    slabs = build_mixed_network_slabs(res.mixed_tables)
+    breakdown = slabs.vmem_breakdown()
+    assert slabs.packed  # bw <= 8: packed table slab is byte-per-entry
+    assert breakdown["table_slab_bytes"] <= exact_bytes * 1.10
+    # and the savings are real against the raw uniform slab
+    raw = build_network_slabs(
+        [(tt.indices, tt.table, tt.bw_in) for tt in tables])
+    assert (breakdown["table_slab_bytes"]
+            < 0.5 * raw.vmem_breakdown()["table_slab_bytes"])
+
+    codes_in = jnp.asarray(np.random.default_rng(0).integers(
+        0, 2 ** cfg.bw, (64, cfg.in_features), dtype=np.int32))
+    want = np.asarray(network_table_forward(tables, codes_in))
+    got = np.asarray(lut_network_mixed_pallas(codes_in, slabs, block_b=32,
+                                              interpret=True))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# three-path sweep: fused-mixed == per-layer == Verilog on optimized stacks
+# (deterministic cases always run; the hypothesis sweep widens them in CI)
+# ---------------------------------------------------------------------------
+
+
+def _check_three_paths(widths, fan_ins, bws, seed, *,
+                       constant_feature=False, boundary_codes=False):
+    """Raw stack -> level-3 compile -> mixed-fused / per-layer / Verilog."""
+    import re
+
+    from repro.core.verilog import evaluate_verilog, generate_verilog
+
+    n_layers = len(bws)
+    layers = _random_stack(widths, fan_ins, bws, seed=seed)
+    for i in range(n_layers - 1):
+        idx, tab, bw = layers[i]
+        layers[i] = (idx, tab % (2 ** bws[i + 1]), bw)
+    if constant_feature:
+        # k=1 collapse: a constant producer narrows to the 1-bit minimum
+        # and its consumers' elements prune away in the same fixpoint
+        idx, tab, bw = layers[0]
+        tab = tab.copy()
+        tab[0, :] = tab[0, 0]
+        layers[0] = (idx, tab, bw)
+    if boundary_codes:
+        # exercise the packed-int8 byte boundaries on the output bus
+        idx, tab, bw = layers[-1]
+        layers[-1] = (idx, (tab % 2) * 255, bw)
+
+    in_features, bw0 = widths[0], bws[0]
+    tables = C.tables_from_triples(layers)
+    res = C.optimize(tables, level=3, in_features=in_features)
+
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 2 ** bw0, (9, in_features),
+                                     dtype=np.int32))
+    want = np.asarray(_ref_forward(codes, layers))
+
+    # fused-mixed (direct slabs) == per-layer (uniform lowering) == raw
+    slabs = build_mixed_network_slabs(res.mixed_tables)
+    got_mixed = np.asarray(lut_network_mixed_pallas(codes, slabs,
+                                                    block_b=4,
+                                                    interpret=True))
+    np.testing.assert_array_equal(got_mixed, want)
+    got_pl = np.asarray(network_table_forward(res.tables, codes))
+    np.testing.assert_array_equal(got_pl, want)
+
+    # Verilog on a few sampled words (the netlist keeps compact wires)
+    files = generate_verilog(res.netlist)
+    vl_layers = 1 + max(int(m.group(1)) for m in
+                        (re.match(r"LUTLayer(\d+)\.v$", f) for f in files)
+                        if m)
+    bw_out = tables[-1].bw_out
+    o_last = tables[-1].out_features
+    for _ in range(3):
+        word = int(rng.integers(0, 2 ** (bw0 * in_features)))
+        digits = [(word >> (bw0 * f)) & (2 ** bw0 - 1)
+                  for f in range(in_features)]
+        expect = np.asarray(_ref_forward(
+            jnp.asarray([digits], jnp.int32), layers))[0]
+        out_word = evaluate_verilog(files, word, n_layers=vl_layers)
+        got = [(out_word >> (bw_out * j)) & (2 ** bw_out - 1)
+               for j in range(o_last)]
+        assert got == [int(v) for v in expect], f"word={word}"
+
+
+@pytest.mark.parametrize("widths,fan_ins,bws,seed,kw", [
+    ((6, 8, 5), (2, 3), (2, 2), 21, {}),
+    ((5, 7, 7, 4), (2, 2, 3), (1, 2, 1), 33, {"constant_feature": True}),
+    ((8, 6, 6), (3, 2), (2, 1), 54, {"boundary_codes": True}),
+    ((4, 9, 4), (2, 2), (1, 1), 77, {"constant_feature": True,
+                                     "boundary_codes": True}),
+])
+def test_mixed_fused_per_layer_verilog_bit_exact(widths, fan_ins, bws,
+                                                 seed, kw):
+    _check_three_paths(widths, fan_ins, bws, seed, **kw)
+
+
+@given(data=st.data())
+@settings(max_examples=12, deadline=None)
+def test_mixed_fused_per_layer_verilog_bit_exact_hypothesis(data):
+    """Ragged fan-ins and widths through the level-3 compiler: the mixed
+    fused kernel, the per-layer path and the emitted Verilog agree on
+    every sampled input.  Includes k=1 collapsed features (constant
+    producers) and packed-int8 boundary codes {0, 255}."""
+    n_layers = data.draw(st.integers(2, 3), label="n_layers")
+    widths = [data.draw(st.integers(3, 8), label=f"w{i}")
+              for i in range(n_layers + 1)]
+    bws = [data.draw(st.integers(1, 2), label=f"bw{i}")
+           for i in range(n_layers)]
+    fan_ins = [data.draw(st.integers(1, max(1, min(widths[i], 6 // bws[i]))),
+                         label=f"fi{i}")
+               for i in range(n_layers)]
+    seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+    _check_three_paths(
+        widths, fan_ins, bws, seed,
+        constant_feature=data.draw(st.booleans(), label="constant_feature"),
+        boundary_codes=data.draw(st.booleans(), label="boundary_codes"))
