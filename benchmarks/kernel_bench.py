@@ -26,7 +26,11 @@ merge silently)::
 Gated quantities: ``fused_speedup`` on fpga4hep model A (with a 25%
 interpret-mode-noise tolerance), the compile section's
 ``slab_reduction_pct`` and ``table_bytes_after`` at level 2 and level 3
-(near-deterministic; small tolerances for cross-version float drift).
+(near-deterministic; small tolerances for cross-version float drift),
+and the ``serving`` section's compile-once contract —
+``retraces_after_warmup`` / ``compiler_runs_after_warmup`` exactly 0 and
+the artifact's table slab byte-exact (sharp), with the engine-vs-uncached
+``serving_speedup`` timing ratio on the wide interpret tolerance.
 ``BENCH_*.json`` at the repo root is gitignored, so the committed baseline
 lives under ``benchmarks/baselines/``.
 """
@@ -44,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compile as rcompile
+from repro.core.table_infer import network_table_forward
 from repro.kernels import ref
 from repro.kernels.lut_lookup import lut_lookup_pallas
 from repro.kernels.lut_network import (build_mixed_network_slabs,
@@ -236,11 +241,12 @@ def lut_network_rows(smoke: bool = False) -> tuple[list[Row], dict]:
         }
         if name == "fpga4hep_modelA":
             extras["fused_speedup"] = speedup
-    extras["compile"] = compile_stats_case(smoke=smoke)
+    extras["compile"], ctx = compile_stats_case(smoke=smoke)
+    extras["serving"] = serving_case(ctx, smoke=smoke)
     return rows, extras
 
 
-def compile_stats_case(smoke: bool = True) -> dict:
+def compile_stats_case(smoke: bool = True) -> tuple[dict, dict]:
     """Truth-table compiler on a *generated* fpga4hep model A stack.
 
     Random tables barely compress (every code is emitted, no structure);
@@ -256,6 +262,10 @@ def compile_stats_case(smoke: bool = True) -> dict:
     compact lowering (vs ``slab_bytes_optimized``, the padded uniform
     figure), and ``mixed_fused_speedup`` times that kernel against the
     per-layer path on the same generated stack.
+
+    Returns ``(report, ctx)`` — ``ctx`` hands the generated model, raw
+    tables and the level-3 ``OptimizeResult`` to ``serving_case`` so the
+    serving section reuses this compile instead of paying for another.
     """
     import jax as _jax
     from repro.configs import fpga4hep
@@ -286,7 +296,7 @@ def compile_stats_case(smoke: bool = True) -> dict:
         "summary": rcompile.summarize(res3.stats),
         **_mixed_fused_report(cfg, tables, res3, smoke=smoke),
     }
-    return report
+    return report, {"cfg": cfg, "tables": tables, "res3": res3}
 
 
 def _mixed_fused_report(cfg, tables, res3, smoke: bool = True) -> dict:
@@ -343,6 +353,81 @@ def _mixed_fused_report(cfg, tables, res3, smoke: bool = True) -> dict:
     }
 
 
+def serving_case(ctx, smoke: bool = True) -> dict:
+    """Compile-once serving artifact vs the legacy per-call flag API.
+
+    Steady-state timing of ``repro.engine.CompiledLUTNet`` on the
+    generated fpga4hep model A stack at level 3 (the deployment shape: a
+    37504 B compiler-exact table slab) against ``ops.lut_network(...,
+    optimize_level=3)`` in two regimes: *cached* (the engine memo
+    absorbing the legacy flags — what loop callers get for free now) and
+    *uncached* (the pre-engine behavior, forced by clearing the memo
+    between calls: one compiler run + slab rebuild per call).
+
+    The sharp fields for the CI gate are ``retraces_after_warmup`` and
+    ``compiler_runs_after_warmup`` — the compile-once contract says both
+    are exactly 0 in steady state, ragged batches included — plus the
+    byte-exact ``artifact_table_slab_bytes``; ``serving_speedup`` (engine
+    vs uncached per-call) is an interpret-mode timing ratio and gets the
+    documented wide noise tolerance.
+    """
+    from repro import engine as rengine
+    from repro.kernels.ops import lut_network
+
+    cfg, tables, res3 = ctx["cfg"], ctx["tables"], ctx["res3"]
+    iters, warmup = (5, 2) if smoke else (20, 3)
+    batch = 128
+    eng = rengine.compile_network(res3, block_b=batch)
+    codes = jnp.asarray(np.random.default_rng(0).integers(
+        0, 2 ** cfg.bw, (batch, cfg.in_features), dtype=np.int32))
+    triples = [(tt.indices, tt.table, tt.bw_in) for tt in tables]
+
+    # bit-exactness first: the artifact vs the per-layer reference
+    want = np.asarray(network_table_forward(tables, codes))
+    np.testing.assert_array_equal(np.asarray(eng(codes)), want)
+
+    # steady state: after the first traced call, ragged batches included,
+    # the artifact must add zero traces and zero compiler runs
+    traces0, runs0 = eng.jit_cache_size(), rengine.compile_runs()
+    us_engine = _bench(eng, codes, iters=iters, warmup=warmup)
+    for b in (1, 37, batch):
+        jax.block_until_ready(eng(codes[:b]))
+    retraces = eng.jit_cache_size() - traces0
+    compiler_runs = rengine.compile_runs() - runs0
+
+    def legacy(c):
+        return lut_network(c, triples, optimize_level=3)
+
+    us_cached = _bench(legacy, codes, iters=iters, warmup=warmup)
+
+    def legacy_uncached(c):
+        # the pre-engine per-call cost: every call re-runs the compiler
+        # and rebuilds the slabs (the memo is what the engine added)
+        rengine.cache_clear()
+        return lut_network(c, triples, optimize_level=3)
+
+    us_uncached = _bench(legacy_uncached, codes, iters=max(2, iters // 2),
+                         warmup=1)
+
+    bd = eng.vmem_breakdown()
+    return {
+        "case": "fpga4hep_modelA_generated_level3",
+        "layout": eng.layout,
+        "block_b": eng.block_b,
+        "batch": batch,
+        "artifact_vmem_bytes": bd["total_bytes"],
+        "artifact_table_slab_bytes": bd["table_slab_bytes"],
+        "us_engine_call": us_engine,
+        "engine_calls_per_sec": 1e6 / us_engine,
+        "us_legacy_cached": us_cached,
+        "us_legacy_uncached": us_uncached,
+        "serving_speedup": us_uncached / us_engine,
+        "legacy_cached_overhead": us_cached / us_engine,
+        "retraces_after_warmup": retraces,
+        "compiler_runs_after_warmup": compiler_runs,
+    }
+
+
 # ---------------------------------------------------------------------------
 # Perf-regression gate (CI bench-smoke): bench JSON vs committed baseline
 # ---------------------------------------------------------------------------
@@ -373,6 +458,18 @@ def baseline_from_payload(payload: dict) -> dict:
                     comp["level3"]["mixed_fused_speedup"],
             },
         },
+        # the compile-once serving contract: retrace/compiler-run counts
+        # are sharp (exactly 0), the artifact slab is byte-exact, the
+        # calls/sec ratio is interpret-mode timing
+        "serving": {
+            "retraces_after_warmup":
+                payload["serving"]["retraces_after_warmup"],
+            "compiler_runs_after_warmup":
+                payload["serving"]["compiler_runs_after_warmup"],
+            "artifact_table_slab_bytes":
+                payload["serving"]["artifact_table_slab_bytes"],
+            "serving_speedup": payload["serving"]["serving_speedup"],
+        },
     }
 
 
@@ -381,7 +478,9 @@ def check_against_baseline(payload: dict, baseline: dict, *,
                            bytes_tolerance: float = 0.05,
                            pct_tolerance: float = 2.0,
                            recode_tolerance: float = 0.2,
-                           mixed_speedup_tolerance: float = 0.5) -> list[str]:
+                           mixed_speedup_tolerance: float = 0.5,
+                           serving_speedup_tolerance: float = 0.5
+                           ) -> list[str]:
     """Compare a bench payload against the committed baseline.
 
     Returns a list of human-readable regression descriptions (empty =
@@ -394,7 +493,12 @@ def check_against_baseline(payload: dict, baseline: dict, *,
     the mixed kernel's per-group unroll makes its interpreter timing the
     noisiest gated ratio, and the deterministic ``mixed_slab_bytes``
     ceiling is the real regression signal for that path — the timing
-    floor only catches collapses, not drift.
+    floor only catches collapses, not drift.  The ``serving`` section
+    splits the same way: ``retraces_after_warmup`` /
+    ``compiler_runs_after_warmup`` and the artifact slab bytes are
+    byte-exact contract fields gated sharply (equality / small ceiling),
+    while ``serving_speedup`` (artifact vs uncached per-call flags) is an
+    interpret-mode ratio with the same wide 50% floor.
     """
     failures: list[str] = []
 
@@ -470,6 +574,26 @@ def check_against_baseline(payload: dict, baseline: dict, *,
              l3_base["mixed_fused_speedup"], mixed_speedup_tolerance,
              note="interpret-mode tolerance, generated fpga4hep model A "
                   "at level 3")
+    # serving section: the compile-once contract (sharp counters + a
+    # byte-exact slab ceiling) and the timing ratio; skips entirely on a
+    # pre-engine baseline
+    s_base = baseline.get("serving")
+    if s_base is not None:
+        s_got = payload["serving"]
+        for fld in ("retraces_after_warmup", "compiler_runs_after_warmup"):
+            if int(s_got[fld]) != int(s_base[fld]):
+                failures.append(
+                    f"serving {fld} {int(s_got[fld])} != baseline "
+                    f"{int(s_base[fld])} (sharp: the compile-once serving "
+                    "contract allows no steady-state re-trace/re-compile)")
+        gate("serving artifact_table_slab_bytes",
+             s_got["artifact_table_slab_bytes"],
+             s_base["artifact_table_slab_bytes"], bytes_tolerance,
+             ceiling=True, fmt="{:.0f}")
+        gate("serving_speedup", s_got["serving_speedup"],
+             s_base["serving_speedup"], serving_speedup_tolerance,
+             note="interpret-mode tolerance, CompiledLUTNet vs uncached "
+                  "per-call flags on generated fpga4hep model A")
     return failures
 
 
@@ -515,6 +639,18 @@ def main() -> None:
               f"{l3['netlist_table_bytes']} B; uniform "
               f"{l3['uniform_slab_bytes']} B), "
               f"speedup={l3['mixed_fused_speedup']:.2f}x vs per-layer")
+    srv = extras.get("serving", {})
+    if srv:
+        print(f"# serving[{srv['case']}]: {srv['engine_calls_per_sec']:.0f} "
+              f"calls/s ({srv['us_engine_call']:.0f} us/call, layout "
+              f"{srv['layout']}, table slab "
+              f"{srv['artifact_table_slab_bytes']} B); "
+              f"{srv['serving_speedup']:.0f}x vs uncached per-call flags "
+              f"({srv['us_legacy_uncached']:.0f} us), "
+              f"{srv['legacy_cached_overhead']:.2f}x overhead via memoized "
+              f"legacy flags; retraces={srv['retraces_after_warmup']} "
+              f"compiler_runs={srv['compiler_runs_after_warmup']} "
+              "after warmup")
 
     payload = {
         "benchmark": "kernel_bench",

@@ -2,15 +2,22 @@
 
 Train a tiny sparse-quantized net on the jet-substructure stand-in,
 convert every neuron to a truth table, verify the tables match the
-quantized network bit-exactly, and emit Verilog.
+quantized network bit-exactly, compile a serving artifact (one compiler
+run, one slab build, one jit — then save/load round-trip), and emit
+Verilog.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import os
+import tempfile
+
 import numpy as np
 
+from repro import engine
 from repro.configs import fpga4hep
 from repro.core import logicnet as LN
+from repro.core.quantize import codes as quant_codes
 from repro.core.train import train_logicnet
 from repro.data import jet_substructure_data
 
@@ -37,7 +44,31 @@ def main() -> None:
           f"{'EXACT MATCH' if exact else 'MISMATCH'}")
     assert exact
 
-    # 4. Emit Verilog (Listings 5.2-5.6 structure).
+    # 4. Compile the serving artifact: the compiler + slab build + jit run
+    # once, then every call serves from VMEM-resident slabs (the
+    # deployment path; the fused= / optimize_level= flags above are thin
+    # compatibility wrappers over this same engine).
+    net = engine.compile_network(tables, optimize_level=3,
+                                 in_features=cfg.in_features)
+    print(f"compiled artifact: layout={net.layout} "
+          f"table slab {net.vmem_breakdown()['table_slab_bytes']} B "
+          f"(raw {net.stats.table_bytes_before} B)")
+    in_codes = quant_codes(cfg.layer_cfgs()[0].in_quant, x[3500:3600])
+    assert bool((np.asarray(net(in_codes)) == np.asarray(t_codes)).all())
+
+    # 5. Save/load round-trip: deployment loads the .npz straight into the
+    # exact slabs — no compiler on the serving host.
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "logicnet_c.npz")
+        net.save(path)
+        reloaded = engine.load(path)
+        exact = bool((np.asarray(reloaded(in_codes))
+                      == np.asarray(t_codes)).all())
+        print(f"artifact round-trip ({os.path.getsize(path)} B npz): "
+              f"{'EXACT MATCH' if exact else 'MISMATCH'}")
+    assert exact
+
+    # 6. Emit Verilog (Listings 5.2-5.6 structure).
     files = LN.to_verilog(cfg, res.model)
     print(f"generated {len(files)} Verilog modules "
           f"({sum(map(len, files.values())) / 1e3:.1f} kB)")

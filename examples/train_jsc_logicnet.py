@@ -14,6 +14,7 @@ import os
 
 import numpy as np
 
+from repro import engine
 from repro.configs import fpga4hep
 from repro.core import logicnet as LN
 from repro.core.train import auc_roc_ovr, train_logicnet
@@ -70,12 +71,26 @@ def main() -> None:
                                 in_features=cfg.in_features)
         print(f"truth-table compiler: {rcompile.summarize(opt.stats)}")
         # verify the already-optimized tables directly — one compile,
-        # reused for the Verilog emission below
+        # reused for the serving artifact and Verilog emission below
         f_codes, t_codes = LN.verify_tables(cfg, res.model, opt.tables,
                                             xv[:200])
         assert (np.asarray(f_codes) == np.asarray(t_codes)).all(), \
             "optimized-table verification failed"
         print("optimized-table functional verification: EXACT")
+
+    # TPU serving artifact: compile once (reusing the OptimizeResult when
+    # the compiler already ran), serve from VMEM-resident slabs forever —
+    # the deployment sibling of the Verilog netlist below
+    net = engine.compile_network(opt if opt is not None else tables,
+                                 in_features=cfg.in_features)
+    bd = net.vmem_breakdown()
+    print(f"serving artifact: layout={net.layout} "
+          f"table slab {bd['table_slab_bytes']} B "
+          f"(total {bd['total_bytes']} B VMEM)")
+    from repro.core.quantize import codes as quant_codes
+    in_codes = quant_codes(cfg.layer_cfgs()[0].in_quant, xv[:200])
+    assert (np.asarray(net(in_codes)) == np.asarray(t_codes)).all(), \
+        "serving artifact verification failed"
 
     if args.out:
         from repro.core import verilog as V
@@ -88,7 +103,11 @@ def main() -> None:
         for name, text in files.items():
             with open(os.path.join(args.out, name), "w") as f:
                 f.write(text)
-        print(f"wrote {len(files)} Verilog files to {args.out}")
+        apath = os.path.join(args.out, f"logicnet_{args.model}.npz")
+        net.save(apath)
+        print(f"wrote {len(files)} Verilog files + serving artifact "
+              f"{os.path.basename(apath)} to {args.out} "
+              f"(engine.load(...) serves it without the compiler)")
 
 
 if __name__ == "__main__":

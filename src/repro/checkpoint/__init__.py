@@ -2,4 +2,5 @@
 
 from repro.checkpoint.ckpt import (  # noqa: F401
     save_checkpoint, restore_checkpoint, latest_step, CheckpointManager,
+    save_arrays, load_arrays,
 )

@@ -6,8 +6,8 @@ Design points for fleet-scale runs:
   values); restore takes an optional ``sharding_fn(path, shape) ->
   Sharding`` so the same checkpoint restores onto a *different* mesh —
   the elastic-scaling path (runtime/).
-* **Atomic**: writes go to ``step_XXXX.tmp`` then rename; a crashed writer
-  never corrupts the latest-step pointer.
+* **Atomic**: writes go to a ``.tmp`` sibling then rename; a crashed
+  writer never corrupts the latest-step pointer.
 * **Keep-k** garbage collection.
 * **Async**: `CheckpointManager(async_save=True)` snapshots to host then
   writes on a daemon thread, keeping the train loop compute-bound.
@@ -41,15 +41,53 @@ def _flatten(tree: Any) -> tuple[dict[str, np.ndarray], Any]:
     return arrays, (manifest, treedef)
 
 
+def _atomic_savez(path: str, manifest: list, keyed: dict[str, np.ndarray],
+                  extra: dict[str, str] | None = None) -> str:
+    """Write one manifest-carrying ``.npz`` atomically (tmp then rename)."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, manifest=json.dumps(manifest), **(extra or {}), **keyed)
+    os.replace(tmp, path)
+    return path
+
+
 def save_checkpoint(directory: str, step: int, tree: Any) -> str:
     os.makedirs(directory, exist_ok=True)
     arrays, (manifest, _) = _flatten(tree)
-    tmp = os.path.join(directory, f"step_{step:08d}.tmp")
-    final = os.path.join(directory, f"step_{step:08d}.npz")
-    with open(tmp, "wb") as f:
-        np.savez(f, manifest=json.dumps(manifest), **arrays)
-    os.replace(tmp, final)
-    return final
+    return _atomic_savez(os.path.join(directory, f"step_{step:08d}.npz"),
+                         manifest, arrays)
+
+
+def save_arrays(path: str, arrays: dict[str, np.ndarray],
+                meta: dict | None = None) -> str:
+    """Named-array + JSON-metadata ``.npz`` in the manifest format.
+
+    The single-file sibling of ``save_checkpoint`` (same manifest
+    machinery, same atomic write): array names live in the manifest, the
+    optional ``meta`` dict rides along as a JSON record.  Used by the
+    serving engine's ``CompiledLUTNet.save`` artifact.
+    """
+    keyed = {}
+    manifest = []
+    for i, (name, arr) in enumerate(arrays.items()):
+        key = f"a{i}"
+        keyed[key] = np.asarray(arr)
+        manifest.append({"path": name, "key": key})
+    return _atomic_savez(path, manifest, keyed,
+                         extra={"meta": json.dumps(meta or {})})
+
+
+def load_arrays(path: str) -> tuple[dict[str, np.ndarray], dict]:
+    """Inverse of ``save_arrays``: ``(name -> array, meta dict)``."""
+    with np.load(path, allow_pickle=False) as z:
+        if "manifest" not in z:
+            raise ValueError(
+                f"{path} is not a manifest-format npz (no 'manifest' "
+                "entry; was it written by plain np.savez?)")
+        manifest = json.loads(str(z["manifest"]))
+        meta = json.loads(str(z["meta"])) if "meta" in z else {}
+        arrays = {m["path"]: z[m["key"]] for m in manifest}
+    return arrays, meta
 
 
 def latest_step(directory: str) -> int | None:

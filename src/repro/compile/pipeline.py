@@ -49,6 +49,12 @@ class PassStats:
         return {"name": self.name, "round": self.round,
                 "seconds": self.seconds, **self.detail}
 
+    @classmethod
+    def from_dict(cls, d: dict) -> "PassStats":
+        """Inverse of ``as_dict`` (detail is the non-header remainder)."""
+        d = dict(d)
+        return cls(d.pop("name"), d.pop("round"), d.pop("seconds"), d)
+
 
 @dataclasses.dataclass
 class CompileStats:
@@ -101,6 +107,26 @@ class CompileStats:
             "bits_saved": self.bits_saved,
             "passes": [p.as_dict() for p in self.passes],
         }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CompileStats":
+        """Inverse of ``as_dict``: rebuild from a JSON record (derived
+        properties — ``dont_care_entries`` etc. — are recomputed, not
+        read).  The serving engine stores compile stats in its artifact
+        metadata this way, so a loaded ``CompiledLUTNet`` reports the
+        stats of the build that produced its slabs."""
+        return cls(
+            level=d["level"], rounds=d["rounds"],
+            passes=[PassStats.from_dict(p) for p in d["passes"]],
+            neurons_before=d["neurons_before"],
+            neurons_after=d["neurons_after"],
+            table_entries_before=d["table_entries_before"],
+            table_entries_after=d["table_entries_after"],
+            table_bytes_before=d["table_bytes_before"],
+            table_bytes_after=d["table_bytes_after"],
+            lut_cost_before=d["lut_cost_before"],
+            lut_cost_after=d["lut_cost_after"],
+        )
 
 
 @dataclasses.dataclass

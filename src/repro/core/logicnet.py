@@ -175,7 +175,9 @@ def verify_tables(cfg: LogicNetCfg, model: list[dict],
 
     Returns (codes_float_path, codes_table_path); the contract is exact
     equality.  ``fused`` runs the table path through the whole-network
-    Pallas kernel instead of the per-layer jnp reference;
+    Pallas engine (``repro.engine`` via ``network_table_forward`` — the
+    flags are compatibility wrappers over the one compiled path) instead
+    of the per-layer jnp reference;
     ``optimize_level`` first shrinks the tables through the truth-table
     compiler (``repro.compile``) — the equality contract must survive it.
     ``fused=True`` with an ``optimize_level`` executes the compiler's
@@ -208,7 +210,10 @@ def sparse_head_forward(cfg: LogicNetCfg, model: list[dict],
     ``optimize_level`` runs the truth-table compiler first and the fused
     engine consumes its mixed-width lowering, so the VMEM slabs shrink to
     the compiler-exact footprint (bit-identical output on reachable
-    inputs)."""
+    inputs).  Both flags route through the memoized serving engine
+    (``repro.engine``), so calling this in a loop does not recompile; a
+    production loop should still compile once via
+    ``repro.engine.compile_network`` and keep the artifact."""
     cfgs = cfg.layer_cfgs()
     c0 = cfgs[0]
     in_codes = codes(c0.in_quant, x)

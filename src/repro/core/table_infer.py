@@ -42,12 +42,17 @@ def network_table_forward(tables: list[LayerTruthTable],
                           optimize_level: int | None = None) -> jax.Array:
     """Full sparse-stack forward on integer codes.
 
-    ``fused=True`` routes through the whole-network Pallas kernel
-    (``kernels.ops.lut_network``): one kernel launch for the entire stack,
-    activation codes held in VMEM between layers, with automatic fallback
-    to per-layer execution when the fused slabs would overflow VMEM.  Both
-    paths are bit-exact with this function's plain-jnp semantics — that
-    equality is the kernel's verification contract.
+    ``fused=True`` routes through the whole-network Pallas engine
+    (``kernels.ops.lut_network``, itself a thin memoized wrapper over
+    ``repro.engine.compile_network``): one kernel launch for the entire
+    stack, activation codes held in VMEM between layers, with automatic
+    fallback to per-layer execution when the fused slabs would overflow
+    VMEM.  Both paths are bit-exact with this function's plain-jnp
+    semantics — that equality is the engine's verification contract, which
+    is why the ``fused=False`` path deliberately stays the hand-rolled jnp
+    loop below.  A throughput serving loop should hold a
+    ``repro.engine.CompiledLUTNet`` directly (compile once, ``save``/
+    ``load`` for deployment); these flags are the compatibility surface.
 
     ``optimize_level`` (0-3) first runs the truth-table compiler
     (``repro.compile.optimize``) over the stack — don't-care

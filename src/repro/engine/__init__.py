@@ -1,0 +1,20 @@
+"""Compile-once serving engine for LUT networks.
+
+``compile_network(...) -> CompiledLUTNet`` is the first-class deployment
+API: one compiler run, one slab build, one jitted batch-shape-robust
+forward — then ``__call__`` serves, ``save``/``load`` round-trip the
+artifact as an ``.npz``, and the legacy ``fused=`` / ``optimize_level=``
+flags on ``ops.lut_network`` / ``table_infer.network_table_forward`` /
+``logicnet.verify_tables`` / ``logicnet.sparse_head_forward`` are thin
+compatibility wrappers over this one code path (memoized via
+``cached_compile``).
+"""
+
+from repro.engine.engine import (ARTIFACT_KIND, FORMAT_VERSION,
+                                 CompiledLUTNet, cache_clear, cache_size,
+                                 cached_compile, compile_network,
+                                 compile_runs, load)
+
+__all__ = ["ARTIFACT_KIND", "FORMAT_VERSION", "CompiledLUTNet",
+           "cache_clear", "cache_size", "cached_compile", "compile_network",
+           "compile_runs", "load"]

@@ -1,0 +1,472 @@
+"""Compile-once serving artifact: ``compile_network(...) -> CompiledLUTNet``.
+
+The paper's whole point is extreme-throughput inference — a LogicNet is a
+pipeline of LUTs serving one input per clock — yet the legacy keyword-flag
+API (``fused=`` / ``optimize_level=`` on four different entry points)
+re-ran the truth-table compiler, rebuilt the VMEM slabs host-side and
+re-traced the Pallas kernel on *every* call.  This module is the
+ahead-of-time half of the deployment story:
+
+    from repro import engine
+    net = engine.compile_network(tables, optimize_level=3,
+                                 in_features=cfg.in_features)
+    out = net(codes)              # jitted, zero re-trace, zero re-compile
+    net.plan                      # the FusedPlan that chose the layout
+    net.stats                     # CompileStats from the one optimize run
+    net.vmem_breakdown()          # per-slab VMEM bytes
+    net.save("model_a.npz")       # deployment skips the compiler entirely
+    net2 = engine.load("model_a.npz")   # exact same slabs, bit-exact
+
+``compile_network`` runs ``repro.compile.optimize`` ONCE, costs both slab
+layouts through ``kernels.ops.fused_plan``, builds the chosen slabs
+(mixed-width, uniform, or the per-layer fallback) ONCE, and serves every
+subsequent call through a shared jitted forward.
+
+Batch-shape robustness: the forward functions are jitted with *static*
+``block_b`` and every call pads its batch up to the next ``block_b``
+multiple (sliced back afterwards), so a serving loop with ragged batch
+sizes hits one trace per ``block_b`` bucket instead of one per distinct
+batch size.  The jitted forwards take the slab arrays as *arguments*
+(static metadata only is closed over), so two artifacts with the same
+shapes — e.g. a live artifact and its ``save``/``load`` round-trip —
+share a single trace.
+
+Serialization rides the checkpoint manifest machinery
+(``checkpoint.ckpt.save_arrays`` / ``load_arrays``): one ``.npz`` holding
+the slab arrays plus a JSON metadata record (layout, static per-layer
+shape metadata, the FusedPlan, and the CompileStats of the build).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.ckpt import load_arrays, save_arrays
+from repro.compile.pipeline import CompileStats, OptimizeResult
+from repro.kernels import ref
+from repro.kernels.lut_lookup import lut_lookup_pallas
+from repro.kernels.lut_network import (LayerMeta, MixedGroupMeta,
+                                       MixedLayerMeta, MixedNetworkSlabs,
+                                       NetworkSlabs,
+                                       build_mixed_network_slabs,
+                                       build_network_slabs,
+                                       lut_network_mixed_pallas,
+                                       lut_network_pallas)
+from repro.kernels.ops import (FUSED_VMEM_BUDGET_BYTES, FusedPlan,
+                               fused_plan)
+
+FORMAT_VERSION = 1
+ARTIFACT_KIND = "repro.engine.CompiledLUTNet"
+
+# process-wide count of optimize() runs issued by this module; serving
+# tests and the bench's `serving` section assert it stays flat after
+# warmup ("zero compiler re-runs")
+_compile_runs = 0
+
+
+def compile_runs() -> int:
+    """How many times this module has invoked the truth-table compiler."""
+    return _compile_runs
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Shared jitted forwards — one per layout, keyed on (shapes, static meta).
+#
+# The slab arrays are jit *arguments*, not closure constants: every artifact
+# with the same shapes and static metadata (including a save/load round-trip
+# of the same model) reuses one trace, and a fresh artifact for a new model
+# costs exactly one trace per block_b bucket.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("meta", "packed", "block_b",
+                                             "interpret"))
+def _uniform_forward(codes, idx_slab, table_slab, *, meta, packed, block_b,
+                     interpret):
+    slabs = NetworkSlabs(idx_slab, table_slab, meta, packed)
+    return lut_network_pallas(codes, slabs, block_b=block_b,
+                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("meta", "out_perm", "packed",
+                                             "block_b", "interpret"))
+def _mixed_forward(codes, idx_slab, shift_slab, width_slab, table_slab, *,
+                   meta, out_perm, packed, block_b, interpret):
+    slabs = MixedNetworkSlabs(idx_slab, shift_slab, width_slab, table_slab,
+                              meta, out_perm, packed)
+    return lut_network_mixed_pallas(codes, slabs, block_b=block_b,
+                                    interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bws", "block_b", "interpret"))
+def _per_layer_forward(codes, idx_tabs, *, bws, block_b, interpret):
+    for (idx, tab), bw in zip(idx_tabs, bws):
+        codes = lut_lookup_pallas(codes, idx, tab, bw, block_b=block_b,
+                                  interpret=interpret)
+    return codes
+
+
+@functools.partial(jax.jit, static_argnames=("bws",))
+def _reference_forward(codes, idx_tabs, *, bws):
+    for (idx, tab), bw in zip(idx_tabs, bws):
+        codes = ref.lut_lookup_ref(codes, idx, tab, bw)
+    return codes
+
+
+_FORWARDS = {"uniform": _uniform_forward, "mixed": _mixed_forward,
+             "per_layer": _per_layer_forward, "reference": _reference_forward}
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledLUTNet:
+    """An ahead-of-time compiled LUT network, ready to serve.
+
+    ``layout`` is the execution path ``compile_network`` chose:
+
+    * ``"mixed"``   — the fused mixed-width kernel over compiler-exact
+      slabs (what ``optimize_level=`` + ``fused=True`` executes);
+    * ``"uniform"`` — the fused kernel over row-stacked uniform slabs;
+    * ``"per_layer"`` — one ``lut_lookup`` Pallas call per layer (the
+      over-VMEM-budget / non-f32-exact fallback, still one jitted chain);
+    * ``"reference"`` — the plain-jnp per-layer oracle (``use_pallas=False``
+      compatibility; jitted but kernel-free).
+
+    Exactly one of ``slabs`` / ``layers`` is populated.  ``plan`` is the
+    ``FusedPlan`` that made the decision, ``stats`` the ``CompileStats``
+    of the single ``repro.compile.optimize`` run (None when the build
+    skipped the compiler).  The artifact is bit-exact with
+    ``table_infer.network_table_forward`` on the stack it was built from.
+    """
+
+    layout: str
+    n_in: int
+    n_out: int
+    block_b: int
+    plan: FusedPlan
+    stats: CompileStats | None
+    slabs: NetworkSlabs | MixedNetworkSlabs | None = None
+    layers: tuple[tuple[jax.Array, jax.Array, int], ...] | None = None
+
+    def __call__(self, codes) -> jax.Array:
+        """(batch, n_in) int codes -> (batch, n_out) int32 codes.
+
+        Ragged batches are padded up to the next ``block_b`` multiple and
+        sliced back, so any batch in (0, block_b] reuses one trace — a
+        steady-state serving loop performs zero re-traces after warmup.
+        """
+        codes = jnp.asarray(codes, dtype=jnp.int32)
+        if codes.ndim != 2 or codes.shape[1] != self.n_in:
+            raise ValueError(
+                f"expected (batch, {self.n_in}) codes, got {codes.shape}")
+        batch = codes.shape[0]
+        if batch == 0:
+            return jnp.zeros((0, self.n_out), dtype=jnp.int32)
+        padded = -(-batch // self.block_b) * self.block_b
+        if padded != batch:
+            codes = jnp.concatenate(
+                [codes, jnp.zeros((padded - batch, self.n_in),
+                                  dtype=codes.dtype)], axis=0)
+        out = self._apply(codes)
+        return out[:batch] if padded != batch else out
+
+    def _apply(self, codes: jax.Array) -> jax.Array:
+        interp = not _on_tpu()
+        if self.layout == "mixed":
+            s = self.slabs
+            return _mixed_forward(
+                codes, s.idx_slab, s.shift_slab, s.width_slab, s.table_slab,
+                meta=s.meta, out_perm=s.out_perm, packed=s.packed,
+                block_b=self.block_b, interpret=interp)
+        if self.layout == "uniform":
+            s = self.slabs
+            return _uniform_forward(
+                codes, s.idx_slab, s.table_slab, meta=s.meta,
+                packed=s.packed, block_b=self.block_b, interpret=interp)
+        idx_tabs = tuple((idx, tab) for idx, tab, _ in self.layers)
+        bws = tuple(bw for _, _, bw in self.layers)
+        if self.layout == "per_layer":
+            return _per_layer_forward(codes, idx_tabs, bws=bws,
+                                      block_b=self.block_b, interpret=interp)
+        return _reference_forward(codes, idx_tabs, bws=bws)
+
+    def jit_cache_size(self) -> int:
+        """Trace count of this artifact's (shared) jitted forward.
+
+        The forwards are process-wide per layout, so treat this as a
+        monotonic counter: a steady-state serving loop must not grow it
+        (the bench's ``retraces_after_warmup`` and the regression tests
+        take before/after deltas).
+        """
+        return _FORWARDS[self.layout]._cache_size()
+
+    def vmem_breakdown(self) -> dict:
+        """Per-slab VMEM bytes of the chosen layout (serving diagnostics)."""
+        if self.slabs is not None:
+            return {**self.slabs.vmem_breakdown(), "layout": self.layout}
+        idx = sum(i.size * i.dtype.itemsize for i, _, _ in self.layers)
+        tab = sum(t.size * t.dtype.itemsize for _, t, _ in self.layers)
+        return {"idx_slab_bytes": idx, "table_slab_bytes": tab,
+                "total_bytes": idx + tab, "packed_int8": False,
+                "layout": self.layout}
+
+    # -- serialization ------------------------------------------------------
+
+    def save(self, path: str) -> str:
+        """Write the artifact as one ``.npz`` (checkpoint manifest format).
+
+        Everything needed to serve — slab arrays, static shape metadata,
+        the plan and the compile stats — round-trips; ``engine.load`` on a
+        fresh process rebuilds bit-exact slabs without touching the
+        compiler (a model A artifact at level 3 loads straight into its
+        exact table slab).
+        """
+        meta: dict = {
+            "kind": ARTIFACT_KIND, "format": FORMAT_VERSION,
+            "layout": self.layout, "n_in": self.n_in, "n_out": self.n_out,
+            "block_b": self.block_b,
+            "plan": dataclasses.asdict(self.plan),
+            "stats": None if self.stats is None else self.stats.as_dict(),
+        }
+        arrays: dict[str, np.ndarray] = {}
+        if self.layout == "mixed":
+            s = self.slabs
+            arrays = {"idx_slab": s.idx_slab, "shift_slab": s.shift_slab,
+                      "width_slab": s.width_slab, "table_slab": s.table_slab}
+            meta["packed"] = s.packed
+            meta["out_perm"] = (None if s.out_perm is None
+                                else list(s.out_perm))
+            meta["layer_meta"] = [
+                {"n_out": m.n_out, "fan_in": m.fan_in,
+                 "groups": [[g.n_out, g.entry_bits] for g in m.groups]}
+                for m in s.meta]
+        elif self.layout == "uniform":
+            s = self.slabs
+            arrays = {"idx_slab": s.idx_slab, "table_slab": s.table_slab}
+            meta["packed"] = s.packed
+            meta["layer_meta"] = [list(m) for m in s.meta]
+        else:
+            meta["bws"] = [int(bw) for _, _, bw in self.layers]
+            for li, (idx, tab, _) in enumerate(self.layers):
+                arrays[f"idx_{li}"] = idx
+                arrays[f"table_{li}"] = tab
+        return save_arrays(path, arrays, meta)
+
+
+def load(path: str) -> CompiledLUTNet:
+    """Rebuild a ``CompiledLUTNet`` from ``CompiledLUTNet.save`` output.
+
+    No compiler run, no slab build: the saved slabs are handed to the
+    shared jitted forwards as-is, so a deployment process pays one jit
+    trace per batch bucket and nothing else.
+    """
+    arrays, meta = load_arrays(path)
+    if meta.get("kind") != ARTIFACT_KIND:
+        raise ValueError(
+            f"{path} is not a {ARTIFACT_KIND} artifact "
+            f"(kind={meta.get('kind')!r})")
+    if meta.get("format", 0) > FORMAT_VERSION:
+        raise ValueError(
+            f"{path} has artifact format {meta['format']}; this build "
+            f"reads <= {FORMAT_VERSION}")
+    plan_fields = {f.name for f in dataclasses.fields(FusedPlan)}
+    plan = FusedPlan(**{k: v for k, v in meta["plan"].items()
+                        if k in plan_fields})
+    stats = (None if meta["stats"] is None
+             else CompileStats.from_dict(meta["stats"]))
+    layout = meta["layout"]
+    slabs = None
+    layers = None
+    if layout == "mixed":
+        lm = tuple(
+            MixedLayerMeta(m["n_out"], m["fan_in"],
+                           tuple(MixedGroupMeta(int(n), int(e))
+                                 for n, e in m["groups"]))
+            for m in meta["layer_meta"])
+        out_perm = (None if meta["out_perm"] is None
+                    else tuple(int(p) for p in meta["out_perm"]))
+        slabs = MixedNetworkSlabs(
+            jnp.asarray(arrays["idx_slab"]), jnp.asarray(arrays["shift_slab"]),
+            jnp.asarray(arrays["width_slab"]),
+            jnp.asarray(arrays["table_slab"]),
+            lm, out_perm, bool(meta["packed"]))
+    elif layout == "uniform":
+        lm = tuple(LayerMeta(*(int(v) for v in m))
+                   for m in meta["layer_meta"])
+        slabs = NetworkSlabs(jnp.asarray(arrays["idx_slab"]),
+                             jnp.asarray(arrays["table_slab"]),
+                             lm, bool(meta["packed"]))
+    else:
+        layers = tuple(
+            (jnp.asarray(arrays[f"idx_{li}"]),
+             jnp.asarray(arrays[f"table_{li}"]), int(bw))
+            for li, bw in enumerate(meta["bws"]))
+    return CompiledLUTNet(layout=layout, n_in=int(meta["n_in"]),
+                          n_out=int(meta["n_out"]),
+                          block_b=int(meta["block_b"]), plan=plan,
+                          stats=stats, slabs=slabs, layers=layers)
+
+
+# ---------------------------------------------------------------------------
+# compile_network: the one place the compile/cost/build/jit decision lives
+# ---------------------------------------------------------------------------
+
+
+def _as_triples(layers) -> list[tuple[np.ndarray, np.ndarray, int]]:
+    out = []
+    for lay in layers:
+        if hasattr(lay, "indices") and hasattr(lay, "table"):
+            out.append((lay.indices, lay.table, int(lay.bw_in)))
+        else:
+            idx, tab, bw = lay
+            out.append((idx, tab, int(bw)))
+    if not out:
+        raise ValueError("compile_network needs at least one layer")
+    return out
+
+
+def compile_network(layers, *, optimize_level: int | None = None,
+                    in_features: int | None = None, fused: bool = True,
+                    use_pallas: bool = True, block_b: int = 128,
+                    vmem_budget_bytes: int = FUSED_VMEM_BUDGET_BYTES
+                    ) -> CompiledLUTNet:
+    """Compile a sparse LUT stack into a serving artifact, once.
+
+    ``layers`` is a ``LayerTruthTable`` list, a sequence of
+    ``(indices, table, bw_in)`` triples, or an already-computed
+    ``repro.compile.OptimizeResult`` (the compiler is then skipped and its
+    lowerings reused — ``optimize_level`` must be None in that case).
+
+    The decision ladder is exactly the one the legacy flags used to
+    re-evaluate per call, now evaluated once:
+
+    1. ``optimize_level`` set -> run ``compile.optimize`` (ONE run);
+       cost the compiler's mixed-width lowering via ``fused_plan`` and
+       take the fused mixed path when it fits the VMEM budget;
+    2. otherwise cost the uniform layout; take the fused uniform path
+       when eligible;
+    3. otherwise fall back to the jitted per-layer chain (``use_pallas=
+       False`` pins the plain-jnp reference chain instead).
+
+    ``in_features`` is the served input bus width (``codes.shape[-1]``);
+    defaults to the widest first-layer index + 1.
+    """
+    global _compile_runs
+    res: OptimizeResult | None = None
+    if isinstance(layers, OptimizeResult):
+        if optimize_level is not None:
+            raise ValueError(
+                "layers is already an OptimizeResult; optimize_level must "
+                "be None (the compiler does not run again)")
+        res = layers
+    else:
+        triples = _as_triples(layers)
+        if in_features is None:
+            # the input bus width: only the FIRST layer's indices address
+            # it (later layers address their producer's bus)
+            in_features = int(np.max(np.asarray(triples[0][0]))) + 1
+        if optimize_level is not None:
+            from repro.compile import optimize, tables_from_triples
+            res = optimize(tables_from_triples(triples), optimize_level,
+                           in_features=in_features)
+            _compile_runs += 1
+    stats = res.stats if res is not None else None
+
+    if res is not None and use_pallas and fused:
+        mixed = res.mixed_tables
+        plan = fused_plan(mixed, vmem_budget_bytes)
+        if plan.fused:
+            slabs = build_mixed_network_slabs(mixed, pack=plan.pack)
+            return CompiledLUTNet(
+                layout="mixed",
+                n_in=res.cnet.in_features if in_features is None
+                else in_features,
+                n_out=slabs.n_out, block_b=block_b, plan=plan, stats=stats,
+                slabs=slabs)
+    if res is not None:
+        # the padded uniform lowering is only materialized once the mixed
+        # fused path has been ruled out (same fall-through as the legacy
+        # ops.lut_network); the optimized first layer may have pruned its
+        # widest input feature, so the bus width comes from the IR, not
+        # from the surviving indices
+        triples = [(tt.indices, tt.table, tt.bw_in) for tt in res.tables]
+        if in_features is None:
+            in_features = res.cnet.in_features
+    n_out = int(np.asarray(triples[-1][1]).shape[0])
+
+    plan = fused_plan(triples, vmem_budget_bytes)
+    if not use_pallas or not fused:
+        plan = dataclasses.replace(plan, fused=False, reason="fused_disabled")
+    if use_pallas and plan.fused:
+        slabs = build_network_slabs(triples, pack=plan.pack)
+        return CompiledLUTNet(layout="uniform", n_in=in_features,
+                              n_out=slabs.n_out, block_b=block_b, plan=plan,
+                              stats=stats, slabs=slabs)
+    jl = tuple((jnp.asarray(np.asarray(i, dtype=np.int32)),
+                jnp.asarray(np.asarray(t, dtype=np.int32)), int(b))
+               for i, t, b in triples)
+    return CompiledLUTNet(layout="per_layer" if use_pallas else "reference",
+                          n_in=in_features, n_out=n_out, block_b=block_b,
+                          plan=plan, stats=stats, layers=jl)
+
+
+# ---------------------------------------------------------------------------
+# Identity-keyed memo for the legacy flag API (ops.lut_network)
+# ---------------------------------------------------------------------------
+
+# key -> (layers kept alive so ids stay unique, CompiledLUTNet); insertion-
+# ordered dict gives FIFO eviction
+_cache: dict[tuple, tuple[list, CompiledLUTNet]] = {}
+_CACHE_MAX = 16
+
+
+def cached_compile(layers, *, optimize_level: int | None,
+                   in_features: int, fused: bool, use_pallas: bool,
+                   block_b: int, vmem_budget_bytes: int) -> CompiledLUTNet:
+    """Memoized ``compile_network`` keyed by *layer identity* + flags.
+
+    The escape hatch that keeps the legacy per-call API cheap: a caller
+    looping over ``ops.lut_network(codes, layers, optimize_level=...)``
+    with the same layer arrays hits the cached ``OptimizeResult`` + built
+    slabs instead of silently recompiling every call.  Keys use ``id()``
+    of the index/table arrays (cheap; no hashing of megabyte tables) and
+    each entry pins its arrays, so a live id can never be recycled into a
+    collision.  The flip side: arrays handed to ``lut_network`` must be
+    treated as immutable — an in-place table edit will serve stale results
+    until ``cache_clear()``.  FIFO-bounded to ``_CACHE_MAX`` entries.
+    """
+    layers = list(layers)
+    triples = _as_triples(layers)
+    key = (tuple((id(i), id(t), b) for i, t, b in triples),
+           optimize_level, in_features, fused, use_pallas, block_b,
+           vmem_budget_bytes)
+    hit = _cache.get(key)
+    if hit is not None:
+        return hit[1]
+    eng = compile_network(triples, optimize_level=optimize_level,
+                          in_features=in_features, fused=fused,
+                          use_pallas=use_pallas, block_b=block_b,
+                          vmem_budget_bytes=vmem_budget_bytes)
+    while len(_cache) >= _CACHE_MAX:
+        _cache.pop(next(iter(_cache)))
+    _cache[key] = (layers, eng)
+    return eng
+
+
+def cache_size() -> int:
+    """Number of memoized legacy-API artifacts (regression tests)."""
+    return len(_cache)
+
+
+def cache_clear() -> None:
+    """Drop all memoized artifacts (tests / after in-place table edits)."""
+    _cache.clear()

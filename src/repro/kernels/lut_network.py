@@ -60,6 +60,15 @@ reshape into one ``(group, E)`` block for the same batched two-level
 gather); the group sort permutes the layer's output bus, which the
 builder folds into the *next* layer's indices — only the final layer's
 permutation survives, undone in-kernel by one static one-hot matmul.
+
+Both slab dataclasses split cleanly into *arrays* (the slabs) and
+*static, hashable metadata* (``meta`` / ``out_perm`` / ``packed``) —
+a deliberate contract the serving engine (``repro.engine``) relies on
+twice: its jitted forwards close over the metadata only and take the
+slab arrays as arguments (so equal-shaped artifacts share one trace),
+and ``CompiledLUTNet.save``/``load`` serialize an artifact as exactly
+those arrays plus a JSON record of the metadata, reconstructing the
+slabs here without re-running either builder.
 """
 
 from __future__ import annotations
@@ -89,7 +98,13 @@ class LayerMeta(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class NetworkSlabs:
-    """A whole sparse stack packed for single-kernel execution."""
+    """A whole sparse stack packed for single-kernel execution.
+
+    Arrays + static metadata only (see module docstring): constructing
+    one from deserialized arrays — or from tracers inside a jitted
+    wrapper — is supported and is how ``repro.engine`` serves and
+    round-trips artifacts without rebuilding slabs.
+    """
 
     idx_slab: jax.Array      # (sum_l O_l, FI_max) int32
     table_slab: jax.Array    # (sum_l O_l, E_max) int32 | int8 (packed)

@@ -12,17 +12,12 @@ import dataclasses
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.lut_lookup import lut_lookup_pallas
-from repro.kernels.lut_network import (build_mixed_network_slabs,
-                                       build_network_slabs,
-                                       estimate_mixed_slab_bytes,
-                                       estimate_slab_bytes,
-                                       lut_network_mixed_pallas,
-                                       lut_network_pallas)
+from repro.kernels.lut_network import (estimate_mixed_slab_bytes,
+                                       estimate_slab_bytes)
 from repro.kernels.masked_matmul import masked_matmul_pallas
 
 # Fused-network slab budget: the whole stack's tables + indices must sit in
@@ -42,7 +37,10 @@ class FusedPlan:
 
     ``reason`` is one of ``"fused"`` (eligible), ``"slab_exceeds_vmem_budget"``
     or ``"codes_exceed_f32_exact_range"`` — the two fallback causes the
-    kernel enforces.  ``layout`` records which slab layout was costed:
+    kernel enforces — or ``"fused_disabled"`` when the caller explicitly
+    opted out (``fused=False`` / ``use_pallas=False``; the serving
+    engine records the decision that was actually made, not just
+    eligibility).  ``layout`` records which slab layout was costed:
     ``"uniform"`` for ``(indices, table, bw_in)`` triples, ``"mixed"`` for
     the compiler's compact ``MixedLayerTables`` lowering (whose table slab
     holds exactly ``2^(sum of input widths)`` entries per neuron, so
@@ -138,48 +136,23 @@ def lut_network(codes: jax.Array, layers, *, fused: bool = True,
     savings as VMEM instead of being padded back to each bus's widest
     feature.
 
-    Slabs are rebuilt (host-side numpy) and the kernel re-traced on every
-    call — fine for verification and batch scoring; a throughput serving
-    loop should instead build the slabs once and jit a closure over
-    ``lut_network_pallas`` / ``lut_network_mixed_pallas`` (see
-    benchmarks/kernel_bench.py).
+    This is now a thin compatibility wrapper over the serving engine
+    (``repro.engine.compile_network``): the compile/cost/build/jit
+    decision runs once and is memoized keyed on the layer arrays'
+    *identity* plus the flags, so repeated calls with the same layers —
+    the legacy serving-loop pattern — reuse the cached artifact instead
+    of silently recompiling every call.  New code should hold the
+    ``CompiledLUTNet`` directly (and ``save``/``load`` it for
+    deployment); callers that mutate a table array in place must call
+    ``repro.engine.cache_clear()`` to avoid stale results.
     """
-    res = None
-    if optimize_level is not None:
-        from repro.compile import optimize, tables_from_triples
-        res = optimize(tables_from_triples(layers), optimize_level,
-                       in_features=codes.shape[-1])
-    if res is not None and use_pallas and fused:
-        mixed = res.mixed_tables
-        plan = fused_plan(mixed, vmem_budget_bytes)
-        if plan.fused:
-            slabs = build_mixed_network_slabs(mixed, pack=plan.pack)
-            return lut_network_mixed_pallas(codes, slabs, block_b=block_b,
-                                            interpret=not _on_tpu())
-        # fall through: the uniform layout is re-costed below (it can be
-        # smaller only in the degenerate tiny-table/huge-fan-in regime
-        # where the three metadata slabs dominate)
-    if res is not None:
-        # the padded uniform lowering is only materialized once the mixed
-        # fused path has been ruled out
-        layers = [(tt.indices, tt.table, tt.bw_in) for tt in res.tables]
-    if not use_pallas:
-        c = codes
-        for indices, table, bw_in in layers:
-            c = ref.lut_lookup_ref(c, jnp.asarray(indices),
-                                   jnp.asarray(table), int(bw_in))
-        return c
-    if fused:
-        plan = fused_plan(layers, vmem_budget_bytes)
-        if plan.fused:
-            slabs = build_network_slabs(layers, pack=plan.pack)
-            return lut_network_pallas(codes, slabs, block_b=block_b,
-                                      interpret=not _on_tpu())
-    c = codes
-    for indices, table, bw_in in layers:
-        c = lut_lookup(c, jnp.asarray(indices), jnp.asarray(table),
-                       int(bw_in), block_b=block_b)
-    return c
+    from repro import engine
+    eng = engine.cached_compile(layers, optimize_level=optimize_level,
+                                in_features=int(codes.shape[-1]),
+                                fused=fused, use_pallas=use_pallas,
+                                block_b=block_b,
+                                vmem_budget_bytes=vmem_budget_bytes)
+    return eng(codes)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

@@ -21,7 +21,9 @@ from benchmarks.kernel_bench import (BASELINE_PATH,  # noqa: E402
 
 def _payload(speedup=2.5, l2_pct=17.2, l2_bytes=53912, l3_pct=17.2,
              l3_bytes=37504, l3_bits_saved=105, l3_mixed_bytes=43228,
-             l3_mixed_speedup=2.2, mode="smoke", backend="cpu"):
+             l3_mixed_speedup=2.2, mode="smoke", backend="cpu",
+             retraces=0, compiler_runs=0, artifact_bytes=37504,
+             serving_speedup=50.0):
     """Bench-JSON shape with only the gated quantities filled in."""
     return {
         "mode": mode,
@@ -37,6 +39,12 @@ def _payload(speedup=2.5, l2_pct=17.2, l2_bytes=53912, l3_pct=17.2,
                 "mixed_slab_bytes": l3_mixed_bytes,
                 "mixed_fused_speedup": l3_mixed_speedup,
             },
+        },
+        "serving": {
+            "retraces_after_warmup": retraces,
+            "compiler_runs_after_warmup": compiler_runs,
+            "artifact_table_slab_bytes": artifact_bytes,
+            "serving_speedup": serving_speedup,
         },
     }
 
@@ -104,6 +112,45 @@ def test_gate_tolerates_pre_mixed_baseline():
     assert check_against_baseline(_payload(), baseline) == []
 
 
+def test_gate_fails_on_serving_retrace_or_recompile():
+    # the compile-once contract is sharp: a single steady-state re-trace
+    # or compiler re-run must trip the gate, no tolerance
+    baseline = baseline_from_payload(_payload())
+    failures = check_against_baseline(_payload(retraces=1), baseline)
+    assert any("retraces_after_warmup" in f for f in failures), failures
+    failures = check_against_baseline(_payload(compiler_runs=2), baseline)
+    assert any("compiler_runs_after_warmup" in f
+               for f in failures), failures
+
+
+def test_gate_fails_on_artifact_slab_regression():
+    # the artifact's table slab creeping above its byte-exact baseline
+    # (e.g. the engine losing the mixed layout) must trip the ceiling
+    baseline = baseline_from_payload(_payload())
+    failures = check_against_baseline(_payload(artifact_bytes=98304),
+                                      baseline)
+    assert any("artifact_table_slab_bytes" in f for f in failures), failures
+
+
+def test_gate_serving_speedup_timing_tolerance():
+    # the serving ratio carries the wide 50% interpret tolerance: drift
+    # passes, collapse trips
+    baseline = baseline_from_payload(_payload(serving_speedup=1000.0))
+    assert check_against_baseline(_payload(serving_speedup=600.0),
+                                  baseline) == []
+    failures = check_against_baseline(_payload(serving_speedup=400.0),
+                                      baseline)
+    assert any("serving_speedup" in f for f in failures), failures
+
+
+def test_gate_tolerates_pre_engine_baseline():
+    # a baseline recorded before the serving section existed must not
+    # fail the gate on the new quantities
+    baseline = baseline_from_payload(_payload())
+    del baseline["serving"]
+    assert check_against_baseline(_payload(), baseline) == []
+
+
 def test_gate_refuses_protocol_mismatch():
     # a full-mode or TPU run is not comparable with the smoke/cpu baseline
     baseline = baseline_from_payload(_payload())
@@ -144,6 +191,13 @@ def test_committed_baseline_is_well_formed():
     assert l3["mixed_slab_bytes"] < 1.25 * l3["table_bytes_after"]
     assert l3["mixed_slab_bytes"] < comp["table_bytes_after"]
     assert l3["mixed_fused_speedup"] > 1.0
+    # the compile-once serving contract: zero steady-state re-traces and
+    # compiler re-runs, artifact table slab at the level-3 byte figure
+    srv = baseline["serving"]
+    assert srv["retraces_after_warmup"] == 0
+    assert srv["compiler_runs_after_warmup"] == 0
+    assert srv["artifact_table_slab_bytes"] == l3["table_bytes_after"]
+    assert srv["serving_speedup"] > 1.0
     # a run reproducing exactly the baseline numbers passes the gate
     payload = _payload(
         speedup=baseline["fused_speedup"],
@@ -153,5 +207,9 @@ def test_committed_baseline_is_well_formed():
         l3_bytes=comp["level3"]["table_bytes_after"],
         l3_bits_saved=comp["level3"]["bits_saved"],
         l3_mixed_bytes=l3["mixed_slab_bytes"],
-        l3_mixed_speedup=l3["mixed_fused_speedup"])
+        l3_mixed_speedup=l3["mixed_fused_speedup"],
+        retraces=srv["retraces_after_warmup"],
+        compiler_runs=srv["compiler_runs_after_warmup"],
+        artifact_bytes=srv["artifact_table_slab_bytes"],
+        serving_speedup=srv["serving_speedup"])
     assert check_against_baseline(payload, baseline) == []

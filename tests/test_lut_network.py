@@ -131,22 +131,26 @@ def test_empty_and_ragged_batch_edges():
 
 
 def test_per_layer_fallback_reuses_jit_cache():
-    """Regression: the per-layer fallback used to call lut_lookup_pallas
-    directly, re-tracing every layer on every call; routed through the
-    jit'd lut_lookup wrapper, repeated calls must add no cache entries."""
-    from repro.kernels import ops
+    """Regression: the per-layer fallback used to re-trace every layer on
+    every call; routed through the engine's shared jitted chain (and the
+    identity-keyed memo), repeated calls must add no traces, no memo
+    entries and no compiler runs."""
+    from repro import engine
 
     layers = _random_stack((8, 10, 6), (2, 2), (2, 2), seed=12)
     codes = jnp.asarray(np.random.default_rng(5).integers(
         0, 4, (7, 8), dtype=np.int32))
     want = np.asarray(_ref_forward(codes, layers))
-    got = lut_network(codes, layers, fused=False)   # traces each layer once
+    got = lut_network(codes, layers, fused=False)   # traces the chain once
     np.testing.assert_array_equal(np.asarray(got), want)
-    before = ops.lut_lookup._cache_size()
+    traces = engine.engine._per_layer_forward._cache_size()
+    memo, runs = engine.cache_size(), engine.compile_runs()
     for _ in range(3):
         got = lut_network(codes, layers, fused=False)
     np.testing.assert_array_equal(np.asarray(got), want)
-    assert ops.lut_lookup._cache_size() == before
+    assert engine.engine._per_layer_forward._cache_size() == traces
+    assert engine.cache_size() == memo
+    assert engine.compile_runs() == runs
 
 
 def test_auto_pack_declines_wide_codes():
