@@ -30,7 +30,10 @@ interpret-mode-noise tolerance), the compile section's
 and the ``serving`` section's compile-once contract —
 ``retraces_after_warmup`` / ``compiler_runs_after_warmup`` exactly 0 and
 the artifact's table slab byte-exact (sharp), with the engine-vs-uncached
-``serving_speedup`` timing ratio on the wide interpret tolerance.
+``serving_speedup`` timing ratio on the wide interpret tolerance.  The
+``serving_tier`` section (micro-batching queue over the artifact, see
+docs/serving.md) gates the same sharp compile-once counters plus
+collapse-only floors/ceilings on its closed-loop p99/QPS/occupancy.
 ``BENCH_*.json`` at the repo root is gitignored, so the committed baseline
 lives under ``benchmarks/baselines/``.
 """
@@ -243,6 +246,7 @@ def lut_network_rows(smoke: bool = False) -> tuple[list[Row], dict]:
             extras["fused_speedup"] = speedup
     extras["compile"], ctx = compile_stats_case(smoke=smoke)
     extras["serving"] = serving_case(ctx, smoke=smoke)
+    extras["serving_tier"] = serving_tier_case(ctx, smoke=smoke)
     return rows, extras
 
 
@@ -428,6 +432,65 @@ def serving_case(ctx, smoke: bool = True) -> dict:
     }
 
 
+def serving_tier_case(ctx, smoke: bool = True) -> dict:
+    """Steady-state micro-batching serving tier on generated model A.
+
+    The request-side half of the deployment story (``repro.serve``): a
+    closed pool of concurrent clients drives ragged single-digit-row
+    requests through a :class:`~repro.serve.ServingTier` over the same
+    level-3 ``CompiledLUTNet`` the ``serving`` section times, and the
+    report is the serving numbers an operator cares about — p50/p99
+    request latency, QPS, and batch occupancy (real rows / padded kernel
+    rows).
+
+    Gate split (same philosophy as every other section):
+    ``retraces_after_warmup`` / ``compiler_runs_after_warmup`` are the
+    sharp compile-once contract — exactly 0 in steady state, coalescing
+    and ragged padding included.  The latency/QPS numbers are host-side +
+    interpret-mode timings on a shared runner, so they only get wide
+    collapse gates (see ``check_against_baseline``).
+    """
+    from repro import engine as rengine
+    from repro import serve
+
+    cfg, res3 = ctx["cfg"], ctx["res3"]
+    n_clients, n_per_client = (6, 8) if smoke else (8, 24)
+    block_b = 16
+    eng = rengine.compile_network(res3, block_b=block_b)
+    tier_cfg = serve.TierConfig(max_batch_rows=2 * block_b,
+                                flush_deadline_s=0.002)
+    rep = serve.run_closed_loop(eng, config=tier_cfg, n_clients=n_clients,
+                                n_per_client=n_per_client, rows_min=1,
+                                rows_max=8, bw=cfg.bw, seed=0,
+                                check_outputs=True)
+    stats = rep.stats
+    return {
+        "case": "fpga4hep_modelA_generated_level3",
+        "layout": eng.layout,
+        "block_b": block_b,
+        "max_batch_rows": tier_cfg.max_batch_rows,
+        "flush_deadline_s": tier_cfg.flush_deadline_s,
+        "n_clients": rep.n_clients,
+        "n_requests": rep.n_requests,
+        "rows": rep.rows,
+        "wall_s": rep.wall_s,
+        "p50_ms": rep.p50_ms,
+        "p90_ms": rep.p90_ms,
+        "p99_ms": rep.p99_ms,
+        "mean_ms": rep.mean_ms,
+        "qps": rep.qps,
+        "rows_per_sec": rep.rows_per_sec,
+        "batches": stats["batches"],
+        "batch_occupancy": stats["batch_occupancy"],
+        "mean_batch_rows": stats["mean_batch_rows"],
+        "flush_causes": stats["flush_causes"],
+        "n_devices": stats["n_devices"],
+        "sharded": stats["sharded"],
+        "retraces_after_warmup": stats["retraces_after_warmup"],
+        "compiler_runs_after_warmup": stats["compiler_runs_after_warmup"],
+    }
+
+
 # ---------------------------------------------------------------------------
 # Perf-regression gate (CI bench-smoke): bench JSON vs committed baseline
 # ---------------------------------------------------------------------------
@@ -470,6 +533,18 @@ def baseline_from_payload(payload: dict) -> dict:
                 payload["serving"]["artifact_table_slab_bytes"],
             "serving_speedup": payload["serving"]["serving_speedup"],
         },
+        # micro-batching tier: the compile-once counters stay sharp, the
+        # latency/QPS/occupancy numbers are host+interpret timings and
+        # only gate collapses (wide tolerances)
+        "serving_tier": {
+            "retraces_after_warmup":
+                payload["serving_tier"]["retraces_after_warmup"],
+            "compiler_runs_after_warmup":
+                payload["serving_tier"]["compiler_runs_after_warmup"],
+            "qps": payload["serving_tier"]["qps"],
+            "p99_ms": payload["serving_tier"]["p99_ms"],
+            "batch_occupancy": payload["serving_tier"]["batch_occupancy"],
+        },
     }
 
 
@@ -479,7 +554,8 @@ def check_against_baseline(payload: dict, baseline: dict, *,
                            pct_tolerance: float = 2.0,
                            recode_tolerance: float = 0.2,
                            mixed_speedup_tolerance: float = 0.5,
-                           serving_speedup_tolerance: float = 0.5
+                           serving_speedup_tolerance: float = 0.5,
+                           tier_timing_tolerance: float = 0.5
                            ) -> list[str]:
     """Compare a bench payload against the committed baseline.
 
@@ -594,6 +670,32 @@ def check_against_baseline(payload: dict, baseline: dict, *,
              s_base["serving_speedup"], serving_speedup_tolerance,
              note="interpret-mode tolerance, CompiledLUTNet vs uncached "
                   "per-call flags on generated fpga4hep model A")
+    # serving_tier section (micro-batching queue over the artifact): the
+    # compile-once counters are the same sharp contract; QPS/p99/occupancy
+    # are closed-loop host timings through an asyncio queue on a shared
+    # runner — the noisiest numbers in the file — so they only gate
+    # collapses (QPS halved, p99 doubled, occupancy halved), not drift;
+    # skips entirely on a pre-tier baseline
+    t_base = baseline.get("serving_tier")
+    if t_base is not None:
+        t_got = payload["serving_tier"]
+        for fld in ("retraces_after_warmup", "compiler_runs_after_warmup"):
+            if int(t_got[fld]) != int(t_base[fld]):
+                failures.append(
+                    f"serving_tier {fld} {int(t_got[fld])} != baseline "
+                    f"{int(t_base[fld])} (sharp: the micro-batching tier "
+                    "must keep the compile-once steady state — coalescing "
+                    "and ragged padding included)")
+        gate("serving_tier qps", t_got["qps"], t_base["qps"],
+             tier_timing_tolerance, fmt="{:.1f}",
+             note="closed-loop host-timing tolerance")
+        gate("serving_tier p99_ms", t_got["p99_ms"], t_base["p99_ms"],
+             tier_timing_tolerance / (1.0 - tier_timing_tolerance),
+             ceiling=True, fmt="{:.2f}",
+             note="closed-loop host-timing tolerance")
+        gate("serving_tier batch_occupancy", t_got["batch_occupancy"],
+             t_base["batch_occupancy"], tier_timing_tolerance,
+             fmt="{:.2f}", note="coalescing-effectiveness floor")
     return failures
 
 
@@ -650,6 +752,19 @@ def main() -> None:
               f"{srv['legacy_cached_overhead']:.2f}x overhead via memoized "
               f"legacy flags; retraces={srv['retraces_after_warmup']} "
               f"compiler_runs={srv['compiler_runs_after_warmup']} "
+              "after warmup")
+    tier = extras.get("serving_tier", {})
+    if tier:
+        print(f"# serving_tier[{tier['case']}]: p50={tier['p50_ms']:.1f}ms "
+              f"p99={tier['p99_ms']:.1f}ms qps={tier['qps']:.0f} "
+              f"({tier['rows_per_sec']:.0f} rows/s, "
+              f"{tier['n_clients']} closed-loop clients); "
+              f"occupancy={tier['batch_occupancy']:.2f} over "
+              f"{tier['batches']} batches "
+              f"(mean {tier['mean_batch_rows']:.1f} rows), "
+              f"{tier['n_devices']} device(s); "
+              f"retraces={tier['retraces_after_warmup']} "
+              f"compiler_runs={tier['compiler_runs_after_warmup']} "
               "after warmup")
 
     payload = {

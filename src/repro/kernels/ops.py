@@ -77,6 +77,16 @@ def fused_plan(layers, vmem_budget_bytes: int = FUSED_VMEM_BUDGET_BYTES
     the latter is costed at its exact compact footprint, which is what
     lets compiler-shrunk stacks that would overflow the budget uniformly
     become fused-eligible.
+
+    Example::
+
+        import numpy as np
+        from repro.kernels.ops import fused_plan
+        idx = np.zeros((4, 2), np.int32)            # 4 neurons, fan-in 2
+        tab = np.zeros((4, 16), np.int32)           # bw=2: 2**(2*2) entries
+        plan = fused_plan([(idx, tab, 2)])
+        assert plan.fused and plan.reason == "fused"
+        assert plan.layout == "uniform" and plan.slab_bytes > 0
     """
     layers = list(layers)
     mixed = bool(layers) and hasattr(layers[0], "entry_bits")
@@ -145,6 +155,18 @@ def lut_network(codes: jax.Array, layers, *, fused: bool = True,
     ``CompiledLUTNet`` directly (and ``save``/``load`` it for
     deployment); callers that mutate a table array in place must call
     ``repro.engine.cache_clear()`` to avoid stale results.
+
+    Example::
+
+        import numpy as np
+        from repro.kernels.ops import lut_network
+        rng = np.random.default_rng(0)
+        idx = np.stack([np.sort(rng.choice(6, 2, replace=False))
+                        for _ in range(4)]).astype(np.int32)
+        tab = rng.integers(0, 4, (4, 16), dtype=np.int32)
+        codes = rng.integers(0, 4, (3, 6), dtype=np.int32)
+        out = lut_network(codes, [(idx, tab, 2)], fused=True)
+        assert out.shape == (3, 4)
     """
     from repro import engine
     eng = engine.cached_compile(layers, optimize_level=optimize_level,

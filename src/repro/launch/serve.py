@@ -1,8 +1,26 @@
-"""Production serving launcher: ``python -m repro.launch.serve``.
+"""Serving launcher: ``python -m repro.launch.serve``.
 
-Mesh-aware batched decode: params + caches sharded per
-parallel/sharding.py, decode step jitted with in/out shardings, a
-continuous-batching slot loop on top (same core as examples/serve_lm.py).
+Two serving stacks behind one CLI:
+
+* ``--lut`` — the LogicNets deployment path: load (or compile) a
+  ``repro.engine.CompiledLUTNet`` and drive it through the
+  ``repro.serve`` micro-batching tier under closed-loop load, reporting
+  steady-state p50/p99 latency, QPS, batch occupancy and the compile-once
+  counters (see docs/serving.md).  This is the CLI face of the bench's
+  gated ``serving_tier`` section::
+
+      # compile generated fpga4hep model A at level 3 and serve it
+      python -m repro.launch.serve --lut
+
+      # serve a saved artifact (e.g. CI's ENGINE_model_a.npz)
+      python -m repro.launch.serve --lut --artifact model_a.npz
+
+      # quick smoke (CI / drift tests)
+      python -m repro.launch.serve --lut --smoke
+
+* default (no ``--lut``) — the big-model demo: mesh-aware batched LM
+  decode, params + caches sharded per parallel/sharding.py, decode step
+  jitted with in/out shardings (same core as examples/serve_lm.py).
 """
 
 from __future__ import annotations
@@ -14,23 +32,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, get_smoke_config
-from repro.launch import steps as S
-from repro.launch.mesh import make_host_mesh
-from repro.models import model as M
-from repro.parallel import sharding as SH
-from repro.parallel.ctx import activation_sharding
 
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-1.7b")
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--cache-len", type=int, default=128)
-    ap.add_argument("--steps", type=int, default=32)
-    ap.add_argument("--model-parallel", type=int, default=1)
-    args = ap.parse_args()
+def _run_lm(args: argparse.Namespace) -> None:
+    """Mesh-aware batched LM decode demo (the pre-LUT serving loop)."""
+    from repro.configs import get_config, get_smoke_config
+    from repro.launch import steps as S
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import model as M
+    from repro.parallel import sharding as SH
+    from repro.parallel.ctx import activation_sharding
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
     mesh = make_host_mesh(model=args.model_parallel)
@@ -51,7 +61,7 @@ def main() -> None:
         tok = jnp.ones((args.slots, 1), jnp.int32)
         pos = jnp.zeros((args.slots,), jnp.int32)
         t0 = time.perf_counter()
-        for i in range(args.steps):
+        for _ in range(args.steps):
             logits, cache = step(params, cache, tok, pos)
             tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             pos = pos + 1
@@ -60,6 +70,123 @@ def main() -> None:
     print(f"[serve] {cfg.arch_id}: {args.steps} decode steps x "
           f"{args.slots} slots on mesh {dict(mesh.shape)} "
           f"({1e3 * dt / args.steps:.1f} ms/step)")
+
+
+def _lut_artifact(args: argparse.Namespace):
+    """Load ``--artifact`` or compile generated fpga4hep model A."""
+    from repro import engine
+
+    if args.artifact:
+        net = engine.load(args.artifact)
+        print(f"[serve --lut] loaded {args.artifact}: layout={net.layout} "
+              f"n_in={net.n_in} n_out={net.n_out} "
+              f"table slab {net.vmem_breakdown()['table_slab_bytes']} B "
+              f"(compiler runs this process: {engine.compile_runs()})")
+        # the artifact does not record its input quantizer width, so the
+        # synthetic-code range comes from --input-bw (default 2: valid for
+        # every LogicNets config in this repo)
+        return net, args.input_bw
+    from repro.configs import fpga4hep
+    from repro.core import logicnet as LN
+
+    cfg = fpga4hep.model_a()
+    model = LN.init(cfg, jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (256, cfg.in_features),
+                           minval=-1, maxval=3)
+    _, model = LN.forward(cfg, model, x, train=True)
+    tables = LN.generate_tables(cfg, model)
+    net = engine.compile_network(tables, optimize_level=args.optimize_level,
+                                 in_features=cfg.in_features,
+                                 block_b=args.block_b)
+    print(f"[serve --lut] compiled generated fpga4hep model A at level "
+          f"{args.optimize_level}: layout={net.layout}, table slab "
+          f"{net.vmem_breakdown()['table_slab_bytes']} B")
+    return net, cfg.bw
+
+
+def _run_lut(args: argparse.Namespace) -> None:
+    """Closed-loop load through the micro-batching serving tier."""
+    from repro import serve
+
+    net, bw = _lut_artifact(args)
+    if args.smoke:
+        args.clients, args.requests_per_client = 4, 4
+    tier_cfg = serve.TierConfig(
+        max_batch_rows=args.max_batch_rows,
+        flush_deadline_s=args.flush_deadline_ms * 1e-3,
+        max_queue_rows=args.max_queue_rows,
+        request_timeout_s=(None if args.request_timeout_ms is None
+                           else args.request_timeout_ms * 1e-3))
+    rep = serve.run_closed_loop(
+        net, config=tier_cfg, n_clients=args.clients,
+        n_per_client=args.requests_per_client, rows_min=args.rows_min,
+        rows_max=args.rows_max, bw=bw, seed=args.seed)
+    st = rep.stats
+    print(f"[serve --lut] {rep.n_requests} requests ({rep.rows} rows) from "
+          f"{rep.n_clients} closed-loop clients in {rep.wall_s:.2f}s")
+    print(f"[serve --lut] latency p50={rep.p50_ms:.2f}ms "
+          f"p90={rep.p90_ms:.2f}ms p99={rep.p99_ms:.2f}ms "
+          f"mean={rep.mean_ms:.2f}ms; qps={rep.qps:.0f} "
+          f"({rep.rows_per_sec:.0f} rows/s)")
+    print(f"[serve --lut] {st['batches']} batches, occupancy "
+          f"{st['batch_occupancy']:.2f} (mean {st['mean_batch_rows']:.1f} "
+          f"rows), flushes={st['flush_causes']}, "
+          f"{st['n_devices']} device(s){' sharded' if st['sharded'] else ''}")
+    print(f"[serve --lut] compile-once contract: "
+          f"retraces={st['retraces_after_warmup']} "
+          f"compiler_runs={st['compiler_runs_after_warmup']} after warmup")
+    if st["retraces_after_warmup"] or st["compiler_runs_after_warmup"]:
+        raise SystemExit("compile-once contract violated in steady state")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--lut", action="store_true",
+                    help="serve a CompiledLUTNet through the micro-batching "
+                    "tier (default: the LM decode demo)")
+    # --lut mode
+    ap.add_argument("--artifact", default=None, metavar="NPZ",
+                    help="saved CompiledLUTNet .npz to serve (default: "
+                    "compile generated fpga4hep model A)")
+    ap.add_argument("--optimize-level", type=int, default=3,
+                    help="truth-table compiler level when compiling")
+    ap.add_argument("--block-b", type=int, default=16,
+                    help="engine batch bucket (jit block size)")
+    ap.add_argument("--clients", type=int, default=8,
+                    help="closed-loop concurrent clients")
+    ap.add_argument("--requests-per-client", type=int, default=16)
+    ap.add_argument("--rows-min", type=int, default=1)
+    ap.add_argument("--rows-max", type=int, default=8,
+                    help="request batch rows are uniform in [min, max]")
+    ap.add_argument("--max-batch-rows", type=int, default=None,
+                    help="tier size-flush threshold (default: block_b)")
+    ap.add_argument("--flush-deadline-ms", type=float, default=2.0,
+                    help="tier deadline flush for partial batches")
+    ap.add_argument("--max-queue-rows", type=int, default=4096,
+                    help="bounded-queue backpressure limit")
+    ap.add_argument("--request-timeout-ms", type=float, default=None,
+                    help="per-request launch deadline (default: none)")
+    ap.add_argument("--input-bw", type=int, default=2,
+                    help="synthetic request code width when serving a "
+                    "saved --artifact (codes are uniform in [0, 2**bw); "
+                    "compiling instead uses the model's own width)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny load (4 clients x 4 requests) for CI")
+    # LM mode
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+    if args.lut:
+        _run_lut(args)
+    else:
+        _run_lm(args)
 
 
 if __name__ == "__main__":

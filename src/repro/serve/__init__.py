@@ -1,0 +1,22 @@
+"""Async micro-batching serving tier for compiled LUT networks.
+
+``repro.engine`` produces the artifact (compile once, save/load, zero
+steady-state re-traces); ``repro.serve`` is the request side — a
+continuous queue that coalesces concurrent requests into
+``block_b``-bucketed batches, shards the batch axis across devices with
+``jax.sharding`` when more than one device exists, applies bounded-queue
+backpressure and per-request timeouts, and degrades gracefully to a plain
+single-device engine call.  See docs/serving.md for the lifecycle and
+knobs, ``python -m repro.launch.serve --lut`` for the CLI front-end, and
+the bench's ``serving_tier`` section for the gated p50/p99/QPS numbers.
+"""
+
+from repro.serve.loadgen import (LoadReport, make_requests,
+                                 run_closed_loop)
+from repro.serve.tier import (RequestTimeout, ServingTier, TierClosed,
+                              TierConfig, TierError, TierOverloaded,
+                              run_requests, serve_once)
+
+__all__ = ["LoadReport", "RequestTimeout", "ServingTier", "TierClosed",
+           "TierConfig", "TierError", "TierOverloaded", "make_requests",
+           "run_closed_loop", "run_requests", "serve_once"]

@@ -1,0 +1,437 @@
+"""Device-sharded async micro-batching serving tier over ``CompiledLUTNet``.
+
+The paper's deployment regime is extreme-throughput inference: per-request
+work is a few thousand table lookups, so the host-side request loop — not
+the kernel — is where a serving stack squanders the hardware.  This module
+is the request-side half of the deployment story that
+``repro.engine.compile_network`` started:
+
+* **micro-batching** — incoming requests (each a ragged ``(rows, n_in)``
+  code batch) are coalesced into ``block_b``-bucketed batches and flushed
+  either when ``max_batch_rows`` rows have accumulated or when the oldest
+  request has waited ``flush_deadline_s`` (size-or-deadline flush);
+* **device sharding** — with more than one device the padded batch is laid
+  out with ``jax.sharding`` on the batch axis (``NamedSharding`` over a
+  1-D ``"data"`` mesh) and the engine's forward runs under ``shard_map``:
+  the tiny table slabs are replicated, the batch is split, every device
+  executes the same fused kernel on its shard (embarrassingly parallel);
+  with one device the tier degrades gracefully to a plain engine call;
+* **backpressure** — the queue is bounded at ``max_queue_rows`` queued
+  rows; a request that would overflow it is rejected immediately with
+  :class:`TierOverloaded` instead of growing an unbounded backlog;
+* **per-request timeouts** — a request that has not been *launched* into a
+  batch within ``request_timeout_s`` is dropped with
+  :class:`RequestTimeout` (a request whose batch is already computing
+  always gets its result);
+* **compile-once steady state** — ``start()`` warms every batch bucket, so
+  a steady-state serving loop performs **zero jit re-traces and zero
+  compiler runs** (``stats()["retraces_after_warmup"]`` /
+  ``["compiler_runs_after_warmup"]`` — asserted by tests/test_serve.py and
+  gated by the bench's ``serving_tier`` section).
+
+Example (single process, default device set)::
+
+    import asyncio
+    import numpy as np
+    from repro import engine, serve
+
+    net = engine.compile_network(layers, optimize_level=3, in_features=12)
+
+    async def main():
+        async with serve.ServingTier(net) as tier:
+            out = await tier.infer(np.zeros((3, net.n_in), np.int32))
+            print(out.shape, tier.stats()["batches"])
+
+    asyncio.run(main())
+
+Outputs are bit-exact with calling the ``CompiledLUTNet`` directly on the
+same rows — coalescing, padding and sharding are pure layout.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+import math
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import engine as rengine
+
+
+class TierError(Exception):
+    """Base class for serving-tier request failures."""
+
+
+class TierOverloaded(TierError):
+    """The bounded request queue is full — the request was rejected."""
+
+
+class TierClosed(TierError):
+    """The tier is stopped (or stopping) and accepts no new requests."""
+
+
+class RequestTimeout(TierError):
+    """The request expired before its batch was launched."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TierConfig:
+    """Knobs of the micro-batching serving tier.
+
+    * ``max_batch_rows`` — flush a batch once this many rows are queued
+      (None: the artifact's ``block_b``).  A single request larger than
+      this forms its own batch.
+    * ``flush_deadline_s`` — flush a non-empty partial batch once its
+      oldest request has waited this long (the latency bound under light
+      load).
+    * ``max_queue_rows`` — bounded-queue backpressure: a request that
+      would push the queued-row count past this is rejected with
+      :class:`TierOverloaded`.
+    * ``request_timeout_s`` — per-request launch deadline; ``None``
+      disables timeouts.
+    * ``devices`` — devices for data-parallel batch sharding (None: all
+      of ``jax.devices()``).  One device means no sharding machinery at
+      all.
+    * ``warmup`` — trace every batch bucket in ``start()`` so steady
+      state is re-trace free.
+    """
+
+    max_batch_rows: int | None = None
+    flush_deadline_s: float = 0.005
+    max_queue_rows: int = 4096
+    request_timeout_s: float | None = None
+    devices: tuple | None = None
+    warmup: bool = True
+
+
+@dataclasses.dataclass
+class _Request:
+    codes: np.ndarray            # (rows, n_in) int32
+    future: asyncio.Future       # resolves to (rows, n_out) np.ndarray
+    enqueue_t: float
+    deadline_t: float | None     # absolute launch deadline (None: never)
+
+
+class ServingTier:
+    """Async micro-batching front-end over one :class:`CompiledLUTNet`.
+
+    Drive it from an event loop: ``await tier.start()`` (or ``async with
+    ServingTier(net) as tier``), then any number of concurrent
+    ``await tier.infer(codes)`` calls, then ``await tier.stop()``.
+    ``infer`` accepts ``(rows, n_in)`` or a single ``(n_in,)`` row and
+    returns the matching ``(rows, n_out)`` / ``(n_out,)`` int32 output,
+    bit-exact with ``net(codes)``.
+    """
+
+    def __init__(self, net, config: TierConfig | None = None):
+        cfg = config or TierConfig()
+        self._net = net
+        self._cfg = cfg
+        self._max_batch = cfg.max_batch_rows or net.block_b
+        if self._max_batch <= 0:
+            raise ValueError("max_batch_rows must be positive")
+        devices = tuple(cfg.devices) if cfg.devices else tuple(jax.devices())
+        self._devices = devices
+        # batches are padded to a multiple of this unit: block_b keeps the
+        # engine on its one-trace-per-bucket contract, len(devices) keeps
+        # the shard_map batch axis evenly divisible
+        self._bucket_unit = math.lcm(net.block_b, len(devices))
+        self._forward, self._sharded_jit = self._make_forward()
+        self._pending: collections.deque[_Request] = collections.deque()
+        self._queued_rows = 0
+        self._wake = asyncio.Event()
+        self._stopping = False
+        self._task: asyncio.Task | None = None
+        self._started = False
+        # stats
+        self._n_requests = 0
+        self._n_rows = 0
+        self._n_batches = 0
+        self._n_padded_rows = 0
+        self._n_rejected = 0
+        self._n_timed_out = 0
+        self._expired_rows = 0
+        self._flush_causes = {"size": 0, "deadline": 0, "drain": 0}
+        self._traces0 = 0
+        self._compiler_runs0 = 0
+
+    # -- forward construction ----------------------------------------------
+
+    def _make_forward(self):
+        """(forward(padded) -> jax.Array, sharded jit fn or None)."""
+        net = self._net
+        if len(self._devices) == 1:
+            return net, None
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+        mesh = Mesh(np.asarray(self._devices), ("data",))
+        # the slab arrays live in net._apply's closure: shard_map treats
+        # them as replicated constants (they are tiny — the whole point of
+        # the mixed layout), only the batch axis of the codes is split
+        fwd = jax.jit(shard_map(net._apply, mesh=mesh, in_specs=P("data"),
+                                out_specs=P("data"), check_rep=False))
+        in_sharding = NamedSharding(mesh, P("data"))
+
+        def forward(padded):
+            return fwd(jax.device_put(padded, in_sharding))
+        return forward, fwd
+
+    def _bucket(self, rows: int) -> int:
+        return -(-rows // self._bucket_unit) * self._bucket_unit
+
+    def _run_batch(self, batch: np.ndarray) -> np.ndarray:
+        """Pad to the bucket, run the (possibly sharded) forward, slice."""
+        rows = batch.shape[0]
+        padded_rows = self._bucket(rows)
+        if padded_rows != rows:
+            batch = np.concatenate(
+                [batch, np.zeros((padded_rows - rows, batch.shape[1]),
+                                 dtype=batch.dtype)], axis=0)
+        if self._sharded_jit is None:
+            out = self._net(batch)           # the engine pads/slices itself
+        else:
+            out = self._forward(jnp.asarray(batch, dtype=jnp.int32))
+        return np.asarray(out)[:rows], padded_rows
+
+    def _trace_count(self) -> int:
+        n = self._net.jit_cache_size()
+        if self._sharded_jit is not None:
+            n += self._sharded_jit._cache_size()
+        return n
+
+    # -- lifecycle ----------------------------------------------------------
+
+    async def start(self) -> "ServingTier":
+        """Warm the batch buckets and start the batcher task."""
+        if self._started:
+            raise TierError("tier already started")
+        self._started = True
+        if self._cfg.warmup:
+            loop = asyncio.get_running_loop()
+            for rows in range(self._bucket_unit,
+                              self._bucket(self._max_batch) + 1,
+                              self._bucket_unit):
+                zeros = np.zeros((rows, self._net.n_in), dtype=np.int32)
+                await loop.run_in_executor(
+                    None, lambda z=zeros: jax.block_until_ready(
+                        self._run_batch(z)[0]))
+        self._traces0 = self._trace_count()
+        self._compiler_runs0 = rengine.compile_runs()
+        self._task = asyncio.create_task(self._batcher())
+        return self
+
+    async def stop(self) -> None:
+        """Drain queued requests into final batches, then shut down.
+
+        Safe on an empty queue (returns as soon as the batcher notices);
+        requests submitted after ``stop`` raise :class:`TierClosed`.
+        """
+        if not self._started or self._stopping:
+            return
+        self._stopping = True
+        self._wake.set()
+        if self._task is not None:
+            await self._task
+
+    async def __aenter__(self) -> "ServingTier":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # -- request path -------------------------------------------------------
+
+    async def infer(self, codes) -> np.ndarray:
+        """Submit one request; resolves when its batch has been served.
+
+        ``codes`` is ``(rows, n_in)`` (or one ``(n_in,)`` row) of int
+        codes.  Raises :class:`TierOverloaded` when the bounded queue is
+        full, :class:`RequestTimeout` when the request expires before
+        launch, :class:`TierClosed` when the tier is stopped, and
+        ``ValueError`` on a shape mismatch.
+        """
+        arr = np.asarray(codes, dtype=np.int32)
+        single = arr.ndim == 1
+        if single:
+            arr = arr[None, :]
+        if arr.ndim != 2 or arr.shape[1] != self._net.n_in:
+            raise ValueError(
+                f"expected (rows, {self._net.n_in}) codes, got "
+                f"{np.asarray(codes).shape}")
+        if self._stopping or not self._started:
+            raise TierClosed("serving tier is not accepting requests")
+        rows = arr.shape[0]
+        if rows == 0:
+            return arr.reshape(0, self._net.n_out)
+        if self._queued_rows + rows > self._cfg.max_queue_rows:
+            self._n_rejected += 1
+            raise TierOverloaded(
+                f"queue holds {self._queued_rows} rows; request of {rows} "
+                f"would exceed max_queue_rows={self._cfg.max_queue_rows}")
+        loop = asyncio.get_running_loop()
+        now = loop.time()
+        deadline = (None if self._cfg.request_timeout_s is None
+                    else now + self._cfg.request_timeout_s)
+        req = _Request(arr, loop.create_future(), now, deadline)
+        self._pending.append(req)
+        self._queued_rows += rows
+        self._n_requests += 1
+        self._n_rows += rows
+        self._wake.set()
+        out = await req.future
+        return out[0] if single else out
+
+    # -- batcher ------------------------------------------------------------
+
+    def _expire_overdue(self, now: float) -> None:
+        while self._pending:
+            req = self._pending[0]
+            if req.deadline_t is None or now < req.deadline_t:
+                break
+            self._pending.popleft()
+            self._queued_rows -= req.codes.shape[0]
+            self._n_timed_out += 1
+            self._expired_rows += req.codes.shape[0]
+            if not req.future.done():
+                req.future.set_exception(RequestTimeout(
+                    f"request waited past request_timeout_s="
+                    f"{self._cfg.request_timeout_s}"))
+
+    def _take_batch(self) -> list[_Request]:
+        taken, rows = [], 0
+        while self._pending:
+            nxt = self._pending[0].codes.shape[0]
+            if taken and rows + nxt > self._max_batch:
+                break
+            taken.append(self._pending.popleft())
+            rows += nxt
+            self._queued_rows -= nxt
+            if rows >= self._max_batch:
+                break
+        return taken
+
+    async def _batcher(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            while not self._pending and not self._stopping:
+                self._wake.clear()
+                await self._wake.wait()
+            now = loop.time()
+            self._expire_overdue(now)
+            if not self._pending:
+                if self._stopping:
+                    break
+                continue
+            # size-or-deadline coalescing window, bounded by the oldest
+            # request's timeout so an expiring request is noticed in time
+            cause = "drain" if self._stopping else None
+            while not self._stopping:
+                if self._queued_rows >= self._max_batch:
+                    cause = "size"
+                    break
+                oldest = self._pending[0]
+                flush_at = oldest.enqueue_t + self._cfg.flush_deadline_s
+                if oldest.deadline_t is not None:
+                    flush_at = min(flush_at, oldest.deadline_t)
+                remaining = flush_at - loop.time()
+                if remaining <= 0:
+                    cause = "deadline"
+                    break
+                self._wake.clear()
+                try:
+                    await asyncio.wait_for(self._wake.wait(), remaining)
+                except asyncio.TimeoutError:
+                    pass
+            self._expire_overdue(loop.time())
+            batch = self._take_batch()
+            if not batch:
+                continue
+            cause = cause or "drain"
+            codes = (batch[0].codes if len(batch) == 1 else
+                     np.concatenate([r.codes for r in batch], axis=0))
+            try:
+                out, padded_rows = await loop.run_in_executor(
+                    None, self._run_batch, codes)
+            except Exception as exc:               # pragma: no cover
+                for req in batch:
+                    if not req.future.done():
+                        req.future.set_exception(
+                            TierError(f"batch execution failed: {exc!r}"))
+                continue
+            self._n_batches += 1
+            self._n_padded_rows += padded_rows
+            self._flush_causes[cause] += 1
+            off = 0
+            for req in batch:
+                n = req.codes.shape[0]
+                if not req.future.done():
+                    req.future.set_result(out[off:off + n])
+                off += n
+        # post-drain: anything that slipped in after the final drain pass
+        while self._pending:
+            req = self._pending.popleft()
+            self._queued_rows -= req.codes.shape[0]
+            if not req.future.done():
+                req.future.set_exception(TierClosed("tier stopped"))
+
+    # -- observability ------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Steady-state serving counters (see the bench's ``serving_tier``
+        section for the latency/QPS view built on top of these).
+
+        ``batch_occupancy`` is served rows / padded batch capacity — the
+        fraction of kernel work doing real requests rather than bucket
+        padding.  ``retraces_after_warmup`` / ``compiler_runs_after_warmup``
+        are the compile-once serving contract and must stay exactly 0 in
+        steady state.
+        """
+        served_rows = self._n_rows - self._expired_rows - self._queued_rows
+        return {
+            "requests": self._n_requests,
+            "rows": self._n_rows,
+            "batches": self._n_batches,
+            "padded_rows": self._n_padded_rows,
+            "batch_occupancy": (served_rows / self._n_padded_rows
+                                if self._n_padded_rows else 0.0),
+            "mean_batch_rows": (served_rows / self._n_batches
+                                if self._n_batches else 0.0),
+            "flush_causes": dict(self._flush_causes),
+            "rejected": self._n_rejected,
+            "timed_out": self._n_timed_out,
+            "queued_rows": self._queued_rows,
+            "n_devices": len(self._devices),
+            "sharded": self._sharded_jit is not None,
+            "bucket_unit": self._bucket_unit,
+            "max_batch_rows": self._max_batch,
+            "retraces_after_warmup": self._trace_count() - self._traces0,
+            "compiler_runs_after_warmup":
+                rengine.compile_runs() - self._compiler_runs0,
+        }
+
+
+async def serve_once(net, requests, config: TierConfig | None = None
+                     ) -> list[np.ndarray]:
+    """Convenience: start a tier, serve ``requests`` concurrently, stop.
+
+    ``requests`` is an iterable of ``(rows, n_in)`` arrays; returns the
+    outputs in order.  This is the one-shot shape used by the bench and
+    the docs examples::
+
+        outs = asyncio.run(serve.serve_once(net, [r0, r1, r2]))
+    """
+    async with ServingTier(net, config) as tier:
+        return list(await asyncio.gather(
+            *[tier.infer(r) for r in requests]))
+
+
+def run_requests(net, requests, config: TierConfig | None = None
+                 ) -> list[np.ndarray]:
+    """Blocking wrapper over :func:`serve_once` for sync callers/tests."""
+    return asyncio.run(serve_once(net, requests, config))

@@ -23,7 +23,8 @@ def _payload(speedup=2.5, l2_pct=17.2, l2_bytes=53912, l3_pct=17.2,
              l3_bytes=37504, l3_bits_saved=105, l3_mixed_bytes=43228,
              l3_mixed_speedup=2.2, mode="smoke", backend="cpu",
              retraces=0, compiler_runs=0, artifact_bytes=37504,
-             serving_speedup=50.0):
+             serving_speedup=50.0, tier_retraces=0, tier_compiler_runs=0,
+             tier_qps=1000.0, tier_p99_ms=8.0, tier_occupancy=0.75):
     """Bench-JSON shape with only the gated quantities filled in."""
     return {
         "mode": mode,
@@ -45,6 +46,13 @@ def _payload(speedup=2.5, l2_pct=17.2, l2_bytes=53912, l3_pct=17.2,
             "compiler_runs_after_warmup": compiler_runs,
             "artifact_table_slab_bytes": artifact_bytes,
             "serving_speedup": serving_speedup,
+        },
+        "serving_tier": {
+            "retraces_after_warmup": tier_retraces,
+            "compiler_runs_after_warmup": tier_compiler_runs,
+            "qps": tier_qps,
+            "p99_ms": tier_p99_ms,
+            "batch_occupancy": tier_occupancy,
         },
     }
 
@@ -151,6 +159,45 @@ def test_gate_tolerates_pre_engine_baseline():
     assert check_against_baseline(_payload(), baseline) == []
 
 
+def test_gate_fails_on_tier_retrace_or_recompile():
+    # the micro-batching tier inherits the sharp compile-once contract:
+    # coalescing/padding must add zero traces and zero compiler runs
+    baseline = baseline_from_payload(_payload())
+    failures = check_against_baseline(_payload(tier_retraces=1), baseline)
+    assert any("serving_tier retraces_after_warmup" in f
+               for f in failures), failures
+    failures = check_against_baseline(_payload(tier_compiler_runs=3),
+                                      baseline)
+    assert any("serving_tier compiler_runs_after_warmup" in f
+               for f in failures), failures
+
+
+def test_gate_tier_timing_collapse_only():
+    # QPS / p99 / occupancy are closed-loop host timings: drift within the
+    # wide tolerance passes, a collapse (QPS halved, p99 doubled,
+    # occupancy halved) trips
+    baseline = baseline_from_payload(
+        _payload(tier_qps=1000.0, tier_p99_ms=8.0, tier_occupancy=0.8))
+    noisy = _payload(tier_qps=600.0, tier_p99_ms=14.0, tier_occupancy=0.5)
+    assert check_against_baseline(noisy, baseline) == []
+    failures = check_against_baseline(_payload(tier_qps=400.0), baseline)
+    assert any("serving_tier qps" in f for f in failures), failures
+    failures = check_against_baseline(_payload(tier_p99_ms=20.0), baseline)
+    assert any("serving_tier p99_ms" in f for f in failures), failures
+    failures = check_against_baseline(_payload(tier_occupancy=0.3),
+                                      baseline)
+    assert any("serving_tier batch_occupancy" in f
+               for f in failures), failures
+
+
+def test_gate_tolerates_pre_tier_baseline():
+    # a baseline recorded before the serving_tier section existed must
+    # not fail the gate on the new quantities
+    baseline = baseline_from_payload(_payload())
+    del baseline["serving_tier"]
+    assert check_against_baseline(_payload(), baseline) == []
+
+
 def test_gate_refuses_protocol_mismatch():
     # a full-mode or TPU run is not comparable with the smoke/cpu baseline
     baseline = baseline_from_payload(_payload())
@@ -198,6 +245,13 @@ def test_committed_baseline_is_well_formed():
     assert srv["compiler_runs_after_warmup"] == 0
     assert srv["artifact_table_slab_bytes"] == l3["table_bytes_after"]
     assert srv["serving_speedup"] > 1.0
+    # the micro-batching tier: same sharp compile-once counters, sane
+    # closed-loop throughput/latency/occupancy numbers
+    tier = baseline["serving_tier"]
+    assert tier["retraces_after_warmup"] == 0
+    assert tier["compiler_runs_after_warmup"] == 0
+    assert tier["qps"] > 0 and tier["p99_ms"] > 0
+    assert 0.0 < tier["batch_occupancy"] <= 1.0
     # a run reproducing exactly the baseline numbers passes the gate
     payload = _payload(
         speedup=baseline["fused_speedup"],
@@ -211,5 +265,9 @@ def test_committed_baseline_is_well_formed():
         retraces=srv["retraces_after_warmup"],
         compiler_runs=srv["compiler_runs_after_warmup"],
         artifact_bytes=srv["artifact_table_slab_bytes"],
-        serving_speedup=srv["serving_speedup"])
+        serving_speedup=srv["serving_speedup"],
+        tier_retraces=tier["retraces_after_warmup"],
+        tier_compiler_runs=tier["compiler_runs_after_warmup"],
+        tier_qps=tier["qps"], tier_p99_ms=tier["p99_ms"],
+        tier_occupancy=tier["batch_occupancy"])
     assert check_against_baseline(payload, baseline) == []

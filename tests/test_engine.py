@@ -262,6 +262,66 @@ def test_legacy_flag_api_memoizes():
     assert engine.compile_runs() == runs0 + 2
 
 
+def test_cache_bounded_fifo_eviction_order(monkeypatch):
+    """The legacy-API memo is FIFO-bounded: filling past _CACHE_MAX
+    evicts the *oldest insertion* (not least-recently-used — a re-hit
+    does not refresh an entry's position)."""
+    from repro.engine import engine as engmod
+
+    engine.cache_clear()
+    monkeypatch.setattr(engmod, "_CACHE_MAX", 3)
+    stacks = [_random_stack((8, 6, 4), (2, 2), (2, 2), seed=100 + i)
+              for i in range(4)]
+
+    def compiled(stack):
+        return engine.cached_compile(
+            stack, optimize_level=None, in_features=8, fused=True,
+            use_pallas=True, block_b=8,
+            vmem_budget_bytes=8 * 2 ** 20)
+
+    a, b, c = (compiled(s) for s in stacks[:3])
+    assert engine.cache_size() == 3
+    assert compiled(stacks[0]) is a, "expected a memo hit"
+    # inserting a 4th evicts the oldest insertion: stack 0, even though
+    # it was just re-hit (FIFO, not LRU)
+    d = compiled(stacks[3])
+    assert engine.cache_size() == 3
+    assert compiled(stacks[1]) is b and compiled(stacks[2]) is c
+    a2 = compiled(stacks[0])
+    assert a2 is not a, "evicted entry must recompile"
+    # that reinsertion evicted the new oldest entry (stack 1); the
+    # younger entries survived
+    assert engine.cache_size() == 3
+    assert compiled(stacks[2]) is c and compiled(stacks[3]) is d
+    engine.cache_clear()
+    assert engine.cache_size() == 0
+
+
+def test_cache_clear_after_in_place_edit():
+    """The documented immutability contract: an in-place table edit is
+    served stale until ``engine.cache_clear()`` forces a fresh compile."""
+    engine.cache_clear()
+    layers = _random_stack((8, 6, 4), (2, 2), (2, 2), seed=77)
+    codes = _codes(8, 2, 9, seed=9)
+    stale = np.asarray(lut_network(codes, layers))
+    np.testing.assert_array_equal(
+        stale, np.asarray(network_table_forward(_tables(layers), codes)))
+
+    idx0, tab0, bw0 = layers[0]
+    tab0 += 1
+    tab0 %= 2 ** bw0                     # in-place edit, same array id
+    np.testing.assert_array_equal(
+        np.asarray(lut_network(codes, layers)), stale)   # stale hit
+
+    engine.cache_clear()
+    fresh = np.asarray(lut_network(codes, layers))
+    np.testing.assert_array_equal(
+        fresh, np.asarray(network_table_forward(_tables(layers), codes)))
+    assert not np.array_equal(fresh, stale), (
+        "the edit was chosen to change outputs; stale and fresh must "
+        "differ for this regression test to mean anything")
+
+
 def test_generated_model_round_trip(tmp_path):
     """End-to-end on real generated tables (fpga4hep model C shape): the
     engine artifact equals the float-path verification codes, survives a

@@ -1,0 +1,157 @@
+"""Docs checker: markdown link validation + fenced-example execution.
+
+Two checks, no third-party deps, shared by CI's ``docs`` job and
+``tests/test_docs.py``:
+
+* ``--links <paths>`` — every *relative* markdown link (``[text](target)``)
+  in the given files/directories must resolve to an existing file, and a
+  ``#anchor`` on a markdown target must match a heading slug in that file
+  (GitHub's slug rules).  External ``http(s)``/``mailto`` links are not
+  fetched — CI must stay hermetic — so keep load-bearing references
+  in-repo.
+* ``--doctest <paths>`` — every fenced ```` ```python ```` block in the
+  given markdown files is executed, blocks within one file sharing a
+  namespace (so examples can build on each other).  A fence that should
+  not run is simply not tagged ``python`` (use ``text``/``bash``).
+
+Usage (what CI runs)::
+
+    python tools/check_docs.py --links docs ROADMAP.md CHANGES.md \
+                               --doctest docs
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\S*)\s*$")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def md_files(paths: list[str]) -> list[pathlib.Path]:
+    out: list[pathlib.Path] = []
+    for p in paths:
+        path = pathlib.Path(p)
+        if path.is_dir():
+            out.extend(sorted(path.rglob("*.md")))
+        else:
+            out.append(path)
+    return out
+
+
+def strip_fences(text: str) -> str:
+    """Drop fenced code blocks so code is never link-scanned."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            out.append(line)
+    return "\n".join(out)
+
+
+def heading_slugs(md_path: pathlib.Path) -> set[str]:
+    """GitHub-style anchor slugs for every heading in ``md_path``."""
+    slugs: set[str] = set()
+    for line in strip_fences(md_path.read_text()).splitlines():
+        m = re.match(r"^#{1,6}\s+(.*)$", line)
+        if not m:
+            continue
+        text = re.sub(r"[`*_]", "", m.group(1)).strip().lower()
+        text = re.sub(r"[^\w\s-]", "", text)
+        slug = re.sub(r"\s+", "-", text)
+        # duplicate headings get -1, -2, ... suffixes on GitHub
+        n, base = 0, slug
+        while slug in slugs:
+            n += 1
+            slug = f"{base}-{n}"
+        slugs.add(slug)
+    return slugs
+
+
+def check_links(paths: list[str]) -> list[str]:
+    errors: list[str] = []
+    for md in md_files(paths):
+        body = strip_fences(md.read_text())
+        for target in LINK_RE.findall(body):
+            if target.startswith(EXTERNAL):
+                continue
+            ref, _, anchor = target.partition("#")
+            dest = md if not ref else (md.parent / ref).resolve()
+            if not dest.exists():
+                errors.append(f"{md}: broken link -> {target}")
+                continue
+            if anchor and dest.suffix == ".md":
+                if anchor not in heading_slugs(dest):
+                    errors.append(
+                        f"{md}: anchor #{anchor} not found in {dest.name}")
+    return errors
+
+
+def python_fences(md_path: pathlib.Path) -> list[tuple[int, str]]:
+    """(first line number, source) of every ```python fence."""
+    blocks: list[tuple[int, str]] = []
+    lines = md_path.read_text().splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i])
+        if m and m.group(1) == "python":
+            start = i + 1
+            j = start
+            while j < len(lines) and not FENCE_RE.match(lines[j]):
+                j += 1
+            blocks.append((start + 1, "\n".join(lines[start:j])))
+            i = j + 1
+        elif m:  # non-python fence: skip to its close
+            j = i + 1
+            while j < len(lines) and not FENCE_RE.match(lines[j]):
+                j += 1
+            i = j + 1
+        else:
+            i += 1
+    return blocks
+
+
+def run_doctests(paths: list[str]) -> list[str]:
+    errors: list[str] = []
+    for md in md_files(paths):
+        blocks = python_fences(md)
+        if not blocks:
+            continue
+        ns: dict = {"__name__": f"docs_doctest_{md.stem}"}
+        for lineno, src in blocks:
+            try:
+                exec(compile(src, f"{md}:{lineno}", "exec"), ns)  # noqa: S102
+            except Exception as exc:  # pragma: no cover - failure reporting
+                errors.append(f"{md}:{lineno}: example raised {exc!r}")
+                break
+        else:
+            print(f"[check_docs] {md}: {len(blocks)} python example(s) OK")
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--links", nargs="+", default=[], metavar="PATH",
+                    help="markdown files/dirs to link-check")
+    ap.add_argument("--doctest", nargs="+", default=[], metavar="PATH",
+                    help="markdown files/dirs whose ```python fences run")
+    args = ap.parse_args(argv)
+    errors = check_links(args.links)
+    if not errors:  # broken docs would make the examples misleading anyway
+        errors += run_doctests(args.doctest)
+    for err in errors:
+        print(f"[check_docs] FAIL {err}", file=sys.stderr)
+    if not errors:
+        n = len(md_files(args.links))
+        print(f"[check_docs] {n} markdown file(s): links OK")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
