@@ -451,18 +451,39 @@ def serving_tier_case(ctx, smoke: bool = True) -> dict:
     collapse gates (see ``check_against_baseline``).
     """
     from repro import engine as rengine
+    from repro import obs
     from repro import serve
 
     cfg, res3 = ctx["cfg"], ctx["res3"]
     n_clients, n_per_client = (6, 8) if smoke else (8, 24)
     block_b = 16
     eng = rengine.compile_network(res3, block_b=block_b)
+
+    def _obs_total(name: str) -> float:
+        metric = obs.registry().get(name)
+        if metric is None:
+            return 0.0
+        if isinstance(metric, obs.Family):
+            return sum(c.value for _, c in metric._series())
+        return metric.value
+
+    # compile-once contract, observed from the *process registry* this
+    # time: across the whole closed-loop run the engine must issue zero
+    # compiler runs and the memo must see zero traffic (the serving path
+    # never touches the legacy flag API) — deterministic, gated sharply
+    obs0 = {name: _obs_total(name)
+            for name in ("engine_compiler_runs_total",
+                         "engine_memo_hits_total",
+                         "engine_memo_misses_total")}
     tier_cfg = serve.TierConfig(max_batch_rows=2 * block_b,
                                 flush_deadline_s=0.002)
     rep = serve.run_closed_loop(eng, config=tier_cfg, n_clients=n_clients,
                                 n_per_client=n_per_client, rows_min=1,
                                 rows_max=8, bw=cfg.bw, seed=0,
                                 check_outputs=True)
+    obs_deltas = {f"{name.removeprefix('engine_').removesuffix('_total')}"
+                  f"_delta": int(_obs_total(name) - obs0[name])
+                  for name in obs0}
     stats = rep.stats
     return {
         "case": "fpga4hep_modelA_generated_level3",
@@ -488,6 +509,12 @@ def serving_tier_case(ctx, smoke: bool = True) -> dict:
         "sharded": stats["sharded"],
         "retraces_after_warmup": stats["retraces_after_warmup"],
         "compiler_runs_after_warmup": stats["compiler_runs_after_warmup"],
+        # span-derived stage breakdown (queue_wait / assembly / device /
+        # total, each {count, mean_ms, p50_ms, p99_ms}) — the "where did
+        # the latency go" view from the tier's obs histograms
+        "latency_breakdown": rep.breakdown,
+        # registry-observed engine counter deltas across the run
+        "obs": obs_deltas,
     }
 
 
@@ -544,6 +571,10 @@ def baseline_from_payload(payload: dict) -> dict:
             "qps": payload["serving_tier"]["qps"],
             "p99_ms": payload["serving_tier"]["p99_ms"],
             "batch_occupancy": payload["serving_tier"]["batch_occupancy"],
+            # registry-observed engine counters across the closed-loop
+            # run: deterministic (all 0 — the serving path never compiles
+            # or touches the legacy memo mid-run), gated by equality
+            "obs": dict(payload["serving_tier"]["obs"]),
         },
     }
 
@@ -696,6 +727,19 @@ def check_against_baseline(payload: dict, baseline: dict, *,
         gate("serving_tier batch_occupancy", t_got["batch_occupancy"],
              t_base["batch_occupancy"], tier_timing_tolerance,
              fmt="{:.2f}", note="coalescing-effectiveness floor")
+        # registry-observed counter deltas: deterministic, equality-gated
+        # (skips on a pre-obs baseline)
+        o_base = t_base.get("obs")
+        if o_base is not None:
+            o_got = t_got.get("obs", {})
+            for fld, want in sorted(o_base.items()):
+                if int(o_got.get(fld, -1)) != int(want):
+                    failures.append(
+                        f"serving_tier obs.{fld} "
+                        f"{int(o_got.get(fld, -1))} != baseline "
+                        f"{int(want)} (sharp: registry-observed engine "
+                        "counters are deterministic across the closed-loop "
+                        "run)")
     return failures
 
 
@@ -711,6 +755,12 @@ def main() -> None:
                     default=None, metavar="PATH",
                     help="run the smoke bench and (re)write the committed "
                     f"baseline (default: {BASELINE_PATH})")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="also dump the repro.obs metrics snapshot "
+                    "(compile-pass timings, engine/tier counters) as JSON")
+    ap.add_argument("--no-run-record", action="store_true",
+                    help="skip writing the content-addressed run record "
+                    "under benchmarks/runs/ (see run_record.py)")
     args = ap.parse_args()
     if args.update_baseline:
         args.smoke = True  # baselines are recorded in the mode CI runs
@@ -766,6 +816,13 @@ def main() -> None:
               f"retraces={tier['retraces_after_warmup']} "
               f"compiler_runs={tier['compiler_runs_after_warmup']} "
               "after warmup")
+        bd = tier.get("latency_breakdown", {})
+        legs = " ".join(
+            f"{stage}={bd[stage]['mean_ms']:.2f}ms"
+            for stage in ("queue_wait", "assembly", "device")
+            if bd.get(stage, {}).get("count"))
+        if legs:
+            print(f"# serving_tier latency breakdown (means): {legs}")
 
     payload = {
         "benchmark": "kernel_bench",
@@ -779,6 +836,22 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {args.json}")
+
+    from repro import obs
+    if args.metrics_json:
+        obs.registry().dump_json(args.metrics_json)
+        print(f"# wrote metrics snapshot {args.metrics_json}")
+
+    if not args.no_run_record:
+        try:
+            from benchmarks.run_record import write_run_record
+        except ImportError:        # run as a bare script, not -m
+            from run_record import write_run_record
+        spec = {"benchmark": "kernel_bench",
+                "mode": payload["mode"], "backend": payload["backend"]}
+        rec = write_run_record(spec, payload,
+                               metrics=obs.registry().snapshot())
+        print(f"# wrote run record {rec}")
 
     if args.update_baseline:
         base_dir = os.path.dirname(args.update_baseline)

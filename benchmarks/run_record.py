@@ -1,0 +1,105 @@
+"""Immutable bench run ledger: ``benchmarks/runs/<hash>.json``.
+
+Every ``kernel_bench`` invocation appends one self-describing record to
+``benchmarks/runs/`` so a perf number can always be traced back to the
+exact configuration and code revision that produced it:
+
+* ``spec`` — the run configuration (benchmark name, mode, backend) and
+  its ``spec_hash`` (sha256 of the canonical JSON), so records of the
+  *same* experiment are groupable across time while any config change
+  yields a new hash — the run's meaning is pinned, never silently
+  redefined;
+* ``git_rev`` — the commit the bench ran at (None outside a checkout);
+* ``payload`` — the full bench JSON (the same content ``--json`` writes);
+* ``metrics`` — the ``repro.obs`` registry snapshot at exit, so the
+  compile-pass timings and engine counters behind the numbers ride along.
+
+The filename is the sha256 of the whole record (content-addressed):
+re-running the identical bench at the identical revision with identical
+numbers is a no-op, while any difference — timings included — lands a new
+file.  Records are never rewritten; ``benchmarks/runs/*.json`` is
+gitignored (the committed ledger is the baseline under
+``benchmarks/baselines/``), and CI uploads the fresh record as an
+artifact of each bench-smoke run.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import subprocess
+import time
+
+RUNS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "runs")
+SCHEMA_VERSION = 1
+
+
+def canonical_json(obj) -> str:
+    """Deterministic JSON: sorted keys, no whitespace (hash input)."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def spec_hash(spec: dict) -> str:
+    """sha256 of the canonical spec — the run's identity."""
+    return hashlib.sha256(canonical_json(spec).encode()).hexdigest()
+
+
+def git_rev() -> str | None:
+    """The checkout's HEAD commit, or None when not in a git repo."""
+    try:
+        proc = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)))
+    except (OSError, subprocess.SubprocessError):
+        return None
+    rev = proc.stdout.strip()
+    return rev if proc.returncode == 0 and rev else None
+
+
+def build_record(spec: dict, payload: dict, metrics: dict | None = None,
+                 *, rev: str | None = None,
+                 timestamp: float | None = None) -> dict:
+    """Assemble a run record (pure; no filesystem access)."""
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "spec": dict(spec),
+        "spec_hash": spec_hash(spec),
+        "git_rev": git_rev() if rev is None else rev,
+        "timestamp": time.time() if timestamp is None else timestamp,
+        "payload": payload,
+        "metrics": metrics or {},
+    }
+
+
+def record_hash(record: dict) -> str:
+    """Content address of a full record (the filename stem)."""
+    return hashlib.sha256(canonical_json(record).encode()).hexdigest()
+
+
+def write_run_record(spec: dict, payload: dict,
+                     metrics: dict | None = None, *,
+                     out_dir: str | None = None,
+                     rev: str | None = None,
+                     timestamp: float | None = None) -> str:
+    """Write one content-addressed record; returns its path.
+
+    An existing file under the same hash has byte-identical content by
+    construction, so it is left untouched (records are immutable).
+    """
+    record = build_record(spec, payload, metrics, rev=rev,
+                          timestamp=timestamp)
+    out_dir = out_dir or RUNS_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{record_hash(record)[:16]}.json")
+    if not os.path.exists(path):
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+    return path
+
+
+__all__ = ["RUNS_DIR", "SCHEMA_VERSION", "build_record", "canonical_json",
+           "git_rev", "record_hash", "spec_hash", "write_run_record"]

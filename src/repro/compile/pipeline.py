@@ -28,12 +28,27 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.compile import passes, reachability, reencode
 from repro.compile.ir import CNet
 from repro.core.netlist import Netlist
 from repro.core.truth_table import LayerTruthTable, MixedLayerTables
 
 MAX_ROUNDS = 16  # fixpoint guard; each round strictly shrinks the net
+
+# PassStats mirrored into the process registry so one snapshot answers
+# "which compile pass got slower?" next to the serving-tier histograms
+_M_OPT_RUNS = obs.registry().counter(
+    "compile_optimize_runs_total",
+    "optimize() invocations by pipeline level", labels=("level",))
+_M_OPT_SECONDS = obs.registry().histogram(
+    "compile_optimize_seconds", "end-to-end optimize() wall time")
+_M_PASS_RUNS = obs.registry().counter(
+    "compile_pass_runs_total",
+    "pass executions across all optimize() rounds", labels=("pass",))
+_M_PASS_SECONDS = obs.registry().counter(
+    "compile_pass_seconds_total",
+    "cumulative wall time per pass name", labels=("pass",))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -206,11 +221,15 @@ def optimize(netlist, level: int = 2, *,
 
     pass_stats: list[PassStats] = []
 
+    t_opt = time.perf_counter()
+
     def run(name: str, fn, rnd: int) -> dict:
         t0 = time.perf_counter()
         detail = fn(net)
-        pass_stats.append(PassStats(name, rnd, time.perf_counter() - t0,
-                                    detail))
+        seconds = time.perf_counter() - t0
+        pass_stats.append(PassStats(name, rnd, seconds, detail))
+        _M_PASS_RUNS.labels(**{"pass": name}).inc()
+        _M_PASS_SECONDS.labels(**{"pass": name}).inc(seconds)
         return detail
 
     rounds = 0
@@ -238,6 +257,8 @@ def optimize(netlist, level: int = 2, *,
             if _shape_signature(net) == sig:
                 break
     net.validate()
+    _M_OPT_RUNS.labels(level=str(level)).inc()
+    _M_OPT_SECONDS.observe(time.perf_counter() - t_opt)
 
     stats = CompileStats(
         level=level, rounds=rounds, passes=pass_stats,

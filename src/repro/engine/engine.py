@@ -41,12 +41,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.checkpoint.ckpt import load_arrays, save_arrays
 from repro.compile.pipeline import CompileStats, OptimizeResult
 from repro.kernels import ref
@@ -68,6 +70,28 @@ ARTIFACT_KIND = "repro.engine.CompiledLUTNet"
 # tests and the bench's `serving` section assert it stays flat after
 # warmup ("zero compiler re-runs")
 _compile_runs = 0
+
+# registry-backed build metrics (docs/observability.md): what the engine
+# decided (layout), what it cost (compiler runs, slab build time), and
+# how the legacy-flag memo behaves (hits/misses)
+_M_COMPILER_RUNS = obs.registry().counter(
+    "engine_compiler_runs_total",
+    "truth-table compiler invocations issued by the engine")
+_M_BUILDS = obs.registry().counter(
+    "engine_builds_total", "CompiledLUTNet builds by chosen layout",
+    labels=("layout",))
+_M_SLAB_BUILD = obs.registry().histogram(
+    "engine_slab_build_seconds",
+    "host-side slab construction time per compile_network build")
+_M_MEMO_HITS = obs.registry().counter(
+    "engine_memo_hits_total",
+    "cached_compile hits (legacy flag calls served from the memo)")
+_M_MEMO_MISSES = obs.registry().counter(
+    "engine_memo_misses_total",
+    "cached_compile misses (legacy flag calls that built an artifact)")
+_M_LOADS = obs.registry().counter(
+    "engine_artifact_loads_total",
+    "CompiledLUTNet artifacts rebuilt from disk via engine.load")
 
 
 def compile_runs() -> int:
@@ -310,6 +334,7 @@ def load(path: str) -> CompiledLUTNet:
             (jnp.asarray(arrays[f"idx_{li}"]),
              jnp.asarray(arrays[f"table_{li}"]), int(bw))
             for li, bw in enumerate(meta["bws"]))
+    _M_LOADS.inc()
     return CompiledLUTNet(layout=layout, n_in=int(meta["n_in"]),
                           n_out=int(meta["n_out"]),
                           block_b=int(meta["block_b"]), plan=plan,
@@ -379,13 +404,17 @@ def compile_network(layers, *, optimize_level: int | None = None,
             res = optimize(tables_from_triples(triples), optimize_level,
                            in_features=in_features)
             _compile_runs += 1
+            _M_COMPILER_RUNS.inc()
     stats = res.stats if res is not None else None
 
     if res is not None and use_pallas and fused:
         mixed = res.mixed_tables
         plan = fused_plan(mixed, vmem_budget_bytes)
         if plan.fused:
+            t0 = time.perf_counter()
             slabs = build_mixed_network_slabs(mixed, pack=plan.pack)
+            _M_SLAB_BUILD.observe(time.perf_counter() - t0)
+            _M_BUILDS.labels(layout="mixed").inc()
             return CompiledLUTNet(
                 layout="mixed",
                 n_in=res.cnet.in_features if in_features is None
@@ -407,14 +436,21 @@ def compile_network(layers, *, optimize_level: int | None = None,
     if not use_pallas or not fused:
         plan = dataclasses.replace(plan, fused=False, reason="fused_disabled")
     if use_pallas and plan.fused:
+        t0 = time.perf_counter()
         slabs = build_network_slabs(triples, pack=plan.pack)
+        _M_SLAB_BUILD.observe(time.perf_counter() - t0)
+        _M_BUILDS.labels(layout="uniform").inc()
         return CompiledLUTNet(layout="uniform", n_in=in_features,
                               n_out=slabs.n_out, block_b=block_b, plan=plan,
                               stats=stats, slabs=slabs)
+    t0 = time.perf_counter()
     jl = tuple((jnp.asarray(np.asarray(i, dtype=np.int32)),
                 jnp.asarray(np.asarray(t, dtype=np.int32)), int(b))
                for i, t, b in triples)
-    return CompiledLUTNet(layout="per_layer" if use_pallas else "reference",
+    _M_SLAB_BUILD.observe(time.perf_counter() - t0)
+    layout = "per_layer" if use_pallas else "reference"
+    _M_BUILDS.labels(layout=layout).inc()
+    return CompiledLUTNet(layout=layout,
                           n_in=in_features, n_out=n_out, block_b=block_b,
                           plan=plan, stats=stats, layers=jl)
 
@@ -451,7 +487,9 @@ def cached_compile(layers, *, optimize_level: int | None,
            vmem_budget_bytes)
     hit = _cache.get(key)
     if hit is not None:
+        _M_MEMO_HITS.inc()
         return hit[1]
+    _M_MEMO_MISSES.inc()
     eng = compile_network(triples, optimize_level=optimize_level,
                           in_features=in_features, fused=fused,
                           use_pallas=use_pallas, block_b=block_b,

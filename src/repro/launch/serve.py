@@ -106,7 +106,7 @@ def _lut_artifact(args: argparse.Namespace):
 
 def _run_lut(args: argparse.Namespace) -> None:
     """Closed-loop load through the micro-batching serving tier."""
-    from repro import serve
+    from repro import obs, serve
 
     net, bw = _lut_artifact(args)
     if args.smoke:
@@ -117,10 +117,11 @@ def _run_lut(args: argparse.Namespace) -> None:
         max_queue_rows=args.max_queue_rows,
         request_timeout_s=(None if args.request_timeout_ms is None
                            else args.request_timeout_ms * 1e-3))
-    rep = serve.run_closed_loop(
-        net, config=tier_cfg, n_clients=args.clients,
-        n_per_client=args.requests_per_client, rows_min=args.rows_min,
-        rows_max=args.rows_max, bw=bw, seed=args.seed)
+    with obs.PeriodicReporter(interval_s=args.report_every_s):
+        rep = serve.run_closed_loop(
+            net, config=tier_cfg, n_clients=args.clients,
+            n_per_client=args.requests_per_client, rows_min=args.rows_min,
+            rows_max=args.rows_max, bw=bw, seed=args.seed)
     st = rep.stats
     print(f"[serve --lut] {rep.n_requests} requests ({rep.rows} rows) from "
           f"{rep.n_clients} closed-loop clients in {rep.wall_s:.2f}s")
@@ -132,9 +133,18 @@ def _run_lut(args: argparse.Namespace) -> None:
           f"{st['batch_occupancy']:.2f} (mean {st['mean_batch_rows']:.1f} "
           f"rows), flushes={st['flush_causes']}, "
           f"{st['n_devices']} device(s){' sharded' if st['sharded'] else ''}")
+    for stage in ("queue_wait", "assembly", "device"):
+        leg = rep.breakdown.get(stage)
+        if leg and leg["count"]:
+            print(f"[serve --lut] {stage}: mean={leg['mean_ms']:.2f}ms "
+                  f"p50={leg['p50_ms']:.2f}ms p99={leg['p99_ms']:.2f}ms")
     print(f"[serve --lut] compile-once contract: "
           f"retraces={st['retraces_after_warmup']} "
           f"compiler_runs={st['compiler_runs_after_warmup']} after warmup")
+    print("[serve --lut]", obs.summary_line())
+    if args.metrics_json:
+        obs.registry().dump_json(args.metrics_json)
+        print(f"[serve --lut] metrics snapshot -> {args.metrics_json}")
     if st["retraces_after_warmup"] or st["compiler_runs_after_warmup"]:
         raise SystemExit("compile-once contract violated in steady state")
 
@@ -175,6 +185,13 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny load (4 clients x 4 requests) for CI")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump the full obs metrics snapshot (tier "
+                    "histograms, engine + compiler counters) as JSON on "
+                    "exit (see docs/observability.md)")
+    ap.add_argument("--report-every-s", type=float, default=5.0,
+                    help="periodic one-line stats report interval while "
+                    "the load runs (0 disables)")
     # LM mode
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--full", action="store_true")

@@ -1,0 +1,21 @@
+"""Unified observability for the serving stack (metrics + span tracing).
+
+One dependency-free substrate shared by the whole pipeline — the
+micro-batching tier (``repro.serve``), the compile-once engine
+(``repro.engine``) and the truth-table compiler (``repro.compile``) all
+record into the process-default :class:`Registry`, so a single
+``obs.registry().snapshot()`` (or ``render_prometheus()``) answers both
+"where did this request's latency go?" (queue-wait / assembly / device
+histograms fed by per-request :class:`Span` traces) and "which compile
+pass got slower?" (per-pass timing counters).  See
+docs/observability.md for the full metric table and the span lifecycle.
+"""
+
+from repro.obs.metrics import (DEFAULT_TIME_BUCKETS, Counter, Family, Gauge,
+                               Histogram, Registry, REGISTRY, registry)
+from repro.obs.report import PeriodicReporter, summary_line
+from repro.obs.trace import REQUEST_STAGES, Span
+
+__all__ = ["Counter", "DEFAULT_TIME_BUCKETS", "Family", "Gauge",
+           "Histogram", "PeriodicReporter", "REGISTRY", "REQUEST_STAGES",
+           "Registry", "Span", "registry", "summary_line"]

@@ -56,11 +56,22 @@ class LoadReport:
     qps: float
     rows_per_sec: float
     stats: dict
+    breakdown: dict = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["stats"] = dict(self.stats)
+        d["breakdown"] = {k: dict(v) for k, v in self.breakdown.items()}
         return d
+
+
+def _percentile(lat_ms: np.ndarray, q: float) -> float:
+    """``np.percentile`` guarded for tiny runs: nan on an empty sample
+    (np.percentile raises), the plain interpolated estimate otherwise —
+    callers treat p99 of a 1-2 request run as indicative only."""
+    if lat_ms.size == 0:
+        return float("nan")
+    return float(np.percentile(lat_ms, q))
 
 
 def make_requests(n_in: int, n_requests: int, *, rows_min: int = 1,
@@ -119,24 +130,26 @@ def run_closed_loop(net, *, config: TierConfig | None = None,
             t0 = time.perf_counter()
             outs, lats = await _closed_loop(tier, requests, n_clients)
             wall = time.perf_counter() - t0
-            return outs, lats, wall, tier.stats()
+            return outs, lats, wall, tier.stats(), tier.latency_breakdown()
 
-    outs, lats, wall, stats = asyncio.run(main())
+    outs, lats, wall, stats, breakdown = asyncio.run(main())
     if check_outputs:
         for req, out in zip(requests, outs):
             np.testing.assert_array_equal(out, np.asarray(net(req)))
     lat_ms = np.sort(np.asarray(lats)) * 1e3
     rows = int(sum(r.shape[0] for r in requests))
+    n_done = len(lats)
     return LoadReport(
         n_clients=n_clients,
-        n_requests=n_requests,
+        n_requests=n_done,
         rows=rows,
         wall_s=wall,
-        p50_ms=float(np.percentile(lat_ms, 50)),
-        p90_ms=float(np.percentile(lat_ms, 90)),
-        p99_ms=float(np.percentile(lat_ms, 99)),
-        mean_ms=float(lat_ms.mean()),
-        qps=n_requests / wall,
+        p50_ms=_percentile(lat_ms, 50),
+        p90_ms=_percentile(lat_ms, 90),
+        p99_ms=_percentile(lat_ms, 99),
+        mean_ms=float(lat_ms.mean()) if n_done else float("nan"),
+        qps=n_done / wall,
         rows_per_sec=rows / wall,
         stats=stats,
+        breakdown=breakdown,
     )

@@ -53,7 +53,9 @@ from __future__ import annotations
 import asyncio
 import collections
 import dataclasses
+import itertools
 import math
+import time
 
 import numpy as np
 
@@ -61,6 +63,74 @@ import jax
 import jax.numpy as jnp
 
 from repro import engine as rengine
+from repro import obs
+
+# each tier instance gets its own label value so per-tier stats stay
+# separable in the shared process registry (stats() reads them back)
+_TIER_IDS = itertools.count()
+
+
+class _TierMetrics:
+    """This tier's labeled children in the process metrics registry.
+
+    One instance per ServingTier: counters mirror the legacy ``stats()``
+    fields, the stage histograms are fed by the per-request spans
+    (queue wait / batch assembly / device time — see
+    docs/observability.md), and the two ``*_after_warmup`` gauges carry
+    the compile-once contract into the snapshot.
+    """
+
+    def __init__(self, tier_id: str) -> None:
+        reg = obs.registry()
+        t = {"tier": tier_id}
+
+        def ctr(name, help_):
+            return reg.counter(name, help_, labels=("tier",)).labels(**t)
+
+        def hist(name, help_):
+            return reg.histogram(name, help_, labels=("tier",)).labels(**t)
+
+        def gauge(name, help_):
+            return reg.gauge(name, help_, labels=("tier",)).labels(**t)
+
+        self.requests = ctr("serve_requests_total",
+                            "requests accepted by the serving tier")
+        self.rows = ctr("serve_rows_total", "request rows accepted")
+        self.batches = ctr("serve_batches_total", "coalesced batches run")
+        self.padded_rows = ctr("serve_padded_rows_total",
+                               "kernel rows launched incl. bucket padding")
+        self.rejected = ctr("serve_rejected_total",
+                            "requests rejected by backpressure")
+        self.timed_out = ctr("serve_timed_out_total",
+                             "requests expired before launch")
+        self.expired_rows = ctr("serve_expired_rows_total",
+                                "rows dropped by request timeouts")
+        self.flush = reg.counter(
+            "serve_flush_total", "batch flushes by cause",
+            labels=("tier", "cause"))
+        self.flush_by_cause = {
+            cause: self.flush.labels(tier=tier_id, cause=cause)
+            for cause in ("size", "deadline", "drain")}
+        self.queue_wait = hist(
+            "serve_queue_wait_seconds",
+            "enqueue -> flush decision (span leg: queue wait)")
+        self.assembly = hist(
+            "serve_assembly_seconds",
+            "flush -> device dispatch (batch concat + executor hand-off)")
+        self.device = hist(
+            "serve_device_seconds",
+            "device dispatch -> completion (padded batch forward)")
+        self.latency = hist(
+            "serve_request_latency_seconds",
+            "enqueue -> completion (whole request span)")
+        self.queued_rows = gauge("serve_queued_rows",
+                                 "rows currently queued")
+        self.retraces = gauge(
+            "serve_retraces_after_warmup",
+            "jit traces added after warmup (compile-once: must stay 0)")
+        self.compiler_runs = gauge(
+            "serve_compiler_runs_after_warmup",
+            "compiler runs after warmup (compile-once: must stay 0)")
 
 
 class TierError(Exception):
@@ -115,6 +185,7 @@ class _Request:
     future: asyncio.Future       # resolves to (rows, n_out) np.ndarray
     enqueue_t: float
     deadline_t: float | None     # absolute launch deadline (None: never)
+    span: obs.Span               # enqueue -> flush -> dispatch -> done
 
 
 class ServingTier:
@@ -148,15 +219,12 @@ class ServingTier:
         self._stopping = False
         self._task: asyncio.Task | None = None
         self._started = False
-        # stats
-        self._n_requests = 0
-        self._n_rows = 0
-        self._n_batches = 0
-        self._n_padded_rows = 0
-        self._n_rejected = 0
-        self._n_timed_out = 0
-        self._expired_rows = 0
-        self._flush_causes = {"size": 0, "deadline": 0, "drain": 0}
+        # observability: every counter the old flat stats() dict carried
+        # now lives in the process metrics registry (labeled per tier);
+        # stats() reads them back so its keys are unchanged
+        self._metrics = _TierMetrics(str(next(_TIER_IDS)))
+        self._recent_spans: collections.deque[obs.Span] = (
+            collections.deque(maxlen=32))
         self._traces0 = 0
         self._compiler_runs0 = 0
 
@@ -185,19 +253,26 @@ class ServingTier:
     def _bucket(self, rows: int) -> int:
         return -(-rows // self._bucket_unit) * self._bucket_unit
 
-    def _run_batch(self, batch: np.ndarray) -> np.ndarray:
-        """Pad to the bucket, run the (possibly sharded) forward, slice."""
+    def _run_batch(self, batch: np.ndarray):
+        """Pad to the bucket, run the (possibly sharded) forward, slice.
+
+        Returns ``(out, padded_rows, t_dispatch, t_done)`` — the two
+        timestamps bracket the device leg of every request span in the
+        batch (materializing the result included).
+        """
         rows = batch.shape[0]
         padded_rows = self._bucket(rows)
         if padded_rows != rows:
             batch = np.concatenate(
                 [batch, np.zeros((padded_rows - rows, batch.shape[1]),
                                  dtype=batch.dtype)], axis=0)
+        t_dispatch = time.perf_counter()
         if self._sharded_jit is None:
             out = self._net(batch)           # the engine pads/slices itself
         else:
             out = self._forward(jnp.asarray(batch, dtype=jnp.int32))
-        return np.asarray(out)[:rows], padded_rows
+        out = np.asarray(out)[:rows]
+        return out, padded_rows, t_dispatch, time.perf_counter()
 
     def _trace_count(self) -> int:
         n = self._net.jit_cache_size()
@@ -270,7 +345,7 @@ class ServingTier:
         if rows == 0:
             return arr.reshape(0, self._net.n_out)
         if self._queued_rows + rows > self._cfg.max_queue_rows:
-            self._n_rejected += 1
+            self._metrics.rejected.inc()
             raise TierOverloaded(
                 f"queue holds {self._queued_rows} rows; request of {rows} "
                 f"would exceed max_queue_rows={self._cfg.max_queue_rows}")
@@ -278,11 +353,12 @@ class ServingTier:
         now = loop.time()
         deadline = (None if self._cfg.request_timeout_s is None
                     else now + self._cfg.request_timeout_s)
-        req = _Request(arr, loop.create_future(), now, deadline)
+        req = _Request(arr, loop.create_future(), now, deadline,
+                       obs.Span("request"))
         self._pending.append(req)
         self._queued_rows += rows
-        self._n_requests += 1
-        self._n_rows += rows
+        self._metrics.requests.inc()
+        self._metrics.rows.inc(rows)
         self._wake.set()
         out = await req.future
         return out[0] if single else out
@@ -296,8 +372,8 @@ class ServingTier:
                 break
             self._pending.popleft()
             self._queued_rows -= req.codes.shape[0]
-            self._n_timed_out += 1
-            self._expired_rows += req.codes.shape[0]
+            self._metrics.timed_out.inc()
+            self._metrics.expired_rows.inc(req.codes.shape[0])
             if not req.future.done():
                 req.future.set_exception(RequestTimeout(
                     f"request waited past request_timeout_s="
@@ -353,26 +429,41 @@ class ServingTier:
             if not batch:
                 continue
             cause = cause or "drain"
+            t_flush = time.perf_counter()   # the flush decision: queue
             codes = (batch[0].codes if len(batch) == 1 else
                      np.concatenate([r.codes for r in batch], axis=0))
             try:
-                out, padded_rows = await loop.run_in_executor(
-                    None, self._run_batch, codes)
+                out, padded_rows, t_dispatch, t_done = (
+                    await loop.run_in_executor(None, self._run_batch, codes))
             except Exception as exc:               # pragma: no cover
                 for req in batch:
                     if not req.future.done():
                         req.future.set_exception(
                             TierError(f"batch execution failed: {exc!r}"))
                 continue
-            self._n_batches += 1
-            self._n_padded_rows += padded_rows
-            self._flush_causes[cause] += 1
+            self._metrics.batches.inc()
+            self._metrics.padded_rows.inc(padded_rows)
+            self._metrics.flush_by_cause[cause].inc()
             off = 0
             for req in batch:
                 n = req.codes.shape[0]
                 if not req.future.done():
                     req.future.set_result(out[off:off + n])
                 off += n
+                # close the request span with the batch's shared
+                # timestamps and feed the stage histograms
+                span = req.span
+                span.mark("flush", t_flush)
+                span.mark("dispatch", t_dispatch)
+                span.mark("done", t_done)
+                self._metrics.queue_wait.observe(
+                    span.duration("enqueue", "flush"))
+                self._metrics.assembly.observe(
+                    span.duration("flush", "dispatch"))
+                self._metrics.device.observe(
+                    span.duration("dispatch", "done"))
+                self._metrics.latency.observe(span.total)
+                self._recent_spans.append(span)
         # post-drain: anything that slipped in after the final drain pass
         while self._pending:
             req = self._pending.popleft()
@@ -390,30 +481,71 @@ class ServingTier:
         fraction of kernel work doing real requests rather than bucket
         padding.  ``retraces_after_warmup`` / ``compiler_runs_after_warmup``
         are the compile-once serving contract and must stay exactly 0 in
-        steady state.
+        steady state.  The same counters live in the process metrics
+        registry (``repro.obs``, labeled per tier); this dict is the
+        backward-compatible flat view of this tier's slice of it.
         """
-        served_rows = self._n_rows - self._expired_rows - self._queued_rows
+        m = self._metrics
+        n_rows = int(m.rows.value)
+        n_batches = int(m.batches.value)
+        n_padded = int(m.padded_rows.value)
+        served_rows = n_rows - int(m.expired_rows.value) - self._queued_rows
+        retraces = self._trace_count() - self._traces0
+        compiler_runs = rengine.compile_runs() - self._compiler_runs0
+        # mirror the point-in-time quantities into the registry so a
+        # snapshot taken after the run carries the compile-once contract
+        m.queued_rows.set(self._queued_rows)
+        m.retraces.set(retraces)
+        m.compiler_runs.set(compiler_runs)
         return {
-            "requests": self._n_requests,
-            "rows": self._n_rows,
-            "batches": self._n_batches,
-            "padded_rows": self._n_padded_rows,
-            "batch_occupancy": (served_rows / self._n_padded_rows
-                                if self._n_padded_rows else 0.0),
-            "mean_batch_rows": (served_rows / self._n_batches
-                                if self._n_batches else 0.0),
-            "flush_causes": dict(self._flush_causes),
-            "rejected": self._n_rejected,
-            "timed_out": self._n_timed_out,
+            "requests": int(m.requests.value),
+            "rows": n_rows,
+            "batches": n_batches,
+            "padded_rows": n_padded,
+            "batch_occupancy": served_rows / n_padded if n_padded else 0.0,
+            "mean_batch_rows": (served_rows / n_batches
+                                if n_batches else 0.0),
+            "flush_causes": {cause: int(c.value)
+                             for cause, c in m.flush_by_cause.items()},
+            "rejected": int(m.rejected.value),
+            "timed_out": int(m.timed_out.value),
             "queued_rows": self._queued_rows,
             "n_devices": len(self._devices),
             "sharded": self._sharded_jit is not None,
             "bucket_unit": self._bucket_unit,
             "max_batch_rows": self._max_batch,
-            "retraces_after_warmup": self._trace_count() - self._traces0,
-            "compiler_runs_after_warmup":
-                rengine.compile_runs() - self._compiler_runs0,
+            "retraces_after_warmup": retraces,
+            "compiler_runs_after_warmup": compiler_runs,
         }
+
+    def latency_breakdown(self) -> dict:
+        """Per-stage latency summary from this tier's span histograms.
+
+        ``{stage: {count, mean_ms, p50_ms, p99_ms}}`` for the three span
+        legs (``queue_wait``, ``assembly``, ``device``) plus the whole
+        request (``total``) — the "where did the latency go" view that
+        ``loadgen.LoadReport.breakdown`` and the bench's ``serving_tier``
+        section surface.  Percentiles are bucket-interpolated estimates;
+        a stage with no observations reports zeros.
+        """
+        m = self._metrics
+        out = {}
+        for stage, h in (("queue_wait", m.queue_wait),
+                         ("assembly", m.assembly),
+                         ("device", m.device),
+                         ("total", m.latency)):
+            n = h.count
+            out[stage] = {
+                "count": n,
+                "mean_ms": h.mean() * 1e3 if n else 0.0,
+                "p50_ms": h.quantile(0.5) * 1e3 if n else 0.0,
+                "p99_ms": h.quantile(0.99) * 1e3 if n else 0.0,
+            }
+        return out
+
+    def recent_spans(self) -> list[obs.Span]:
+        """The most recent completed request spans (bounded ring)."""
+        return list(self._recent_spans)
 
 
 async def serve_once(net, requests, config: TierConfig | None = None

@@ -17,6 +17,8 @@ sys.path.insert(0, REPO)
 from benchmarks.kernel_bench import (BASELINE_PATH,  # noqa: E402
                                      baseline_from_payload,
                                      check_against_baseline)
+from benchmarks.run_record import (build_record, record_hash,  # noqa: E402
+                                   spec_hash, write_run_record)
 
 
 def _payload(speedup=2.5, l2_pct=17.2, l2_bytes=53912, l3_pct=17.2,
@@ -24,8 +26,12 @@ def _payload(speedup=2.5, l2_pct=17.2, l2_bytes=53912, l3_pct=17.2,
              l3_mixed_speedup=2.2, mode="smoke", backend="cpu",
              retraces=0, compiler_runs=0, artifact_bytes=37504,
              serving_speedup=50.0, tier_retraces=0, tier_compiler_runs=0,
-             tier_qps=1000.0, tier_p99_ms=8.0, tier_occupancy=0.75):
+             tier_qps=1000.0, tier_p99_ms=8.0, tier_occupancy=0.75,
+             tier_obs=None):
     """Bench-JSON shape with only the gated quantities filled in."""
+    if tier_obs is None:
+        tier_obs = {"compiler_runs_delta": 0, "memo_hits_delta": 0,
+                    "memo_misses_delta": 0}
     return {
         "mode": mode,
         "backend": backend,
@@ -53,6 +59,7 @@ def _payload(speedup=2.5, l2_pct=17.2, l2_bytes=53912, l3_pct=17.2,
             "qps": tier_qps,
             "p99_ms": tier_p99_ms,
             "batch_occupancy": tier_occupancy,
+            "obs": tier_obs,
         },
     }
 
@@ -190,6 +197,28 @@ def test_gate_tier_timing_collapse_only():
                for f in failures), failures
 
 
+def test_gate_fails_on_tier_obs_counter_drift():
+    # the registry-observed engine deltas across the closed-loop run are
+    # deterministic (all 0): any drift — a compiler run, memo traffic —
+    # is a real behavior change and trips the equality gate
+    baseline = baseline_from_payload(_payload())
+    for fld in ("compiler_runs_delta", "memo_hits_delta",
+                "memo_misses_delta"):
+        bad = dict(compiler_runs_delta=0, memo_hits_delta=0,
+                   memo_misses_delta=0)
+        bad[fld] = 1
+        failures = check_against_baseline(_payload(tier_obs=bad), baseline)
+        assert any(f"obs.{fld}" in f for f in failures), (fld, failures)
+
+
+def test_gate_tolerates_pre_obs_baseline():
+    # a baseline recorded before the obs counter deltas existed must not
+    # fail the gate on the new quantities
+    baseline = baseline_from_payload(_payload())
+    del baseline["serving_tier"]["obs"]
+    assert check_against_baseline(_payload(), baseline) == []
+
+
 def test_gate_tolerates_pre_tier_baseline():
     # a baseline recorded before the serving_tier section existed must
     # not fail the gate on the new quantities
@@ -219,6 +248,38 @@ def test_gate_ignores_small_deterministic_drift():
     payload = _payload(l2_pct=16.9, l2_bytes=53912 + 500,
                        l3_bytes=37504 + 500)
     assert check_against_baseline(payload, baseline) == []
+
+
+def test_run_record_content_addressed(tmp_path):
+    """Identical (spec, payload, rev, timestamp) -> identical record file;
+    any spec change moves the spec hash; records never get rewritten."""
+    spec = {"benchmark": "kernel_bench", "mode": "smoke", "backend": "cpu"}
+    payload = _payload()
+    p1 = write_run_record(spec, payload, {"m": 1}, out_dir=str(tmp_path),
+                          rev="abc123", timestamp=1000.0)
+    p2 = write_run_record(spec, payload, {"m": 1}, out_dir=str(tmp_path),
+                          rev="abc123", timestamp=1000.0)
+    assert p1 == p2 and len(list(tmp_path.glob("*.json"))) == 1
+    with open(p1) as f:
+        rec = json.load(f)
+    assert rec["schema_version"] == 1
+    assert rec["spec"] == spec
+    assert rec["spec_hash"] == spec_hash(spec)
+    assert rec["git_rev"] == "abc123"
+    assert rec["payload"]["mode"] == "smoke"
+    assert rec["metrics"] == {"m": 1}
+    # the filename is the content address
+    assert os.path.basename(p1) == record_hash(rec)[:16] + ".json"
+    # a different timestamp (a new run) lands a second file
+    p3 = write_run_record(spec, payload, {"m": 1}, out_dir=str(tmp_path),
+                          rev="abc123", timestamp=2000.0)
+    assert p3 != p1 and len(list(tmp_path.glob("*.json"))) == 2
+    # spec identity is stable against key order but not content
+    assert spec_hash({"mode": "smoke", "backend": "cpu",
+                      "benchmark": "kernel_bench"}) == rec["spec_hash"]
+    assert spec_hash({**spec, "mode": "full"}) != rec["spec_hash"]
+    assert (build_record(spec, payload, rev="abc123", timestamp=1000.0)
+            ["metrics"] == {})
 
 
 def test_committed_baseline_is_well_formed():
@@ -252,6 +313,10 @@ def test_committed_baseline_is_well_formed():
     assert tier["compiler_runs_after_warmup"] == 0
     assert tier["qps"] > 0 and tier["p99_ms"] > 0
     assert 0.0 < tier["batch_occupancy"] <= 1.0
+    # the registry-observed engine deltas are part of the compile-once
+    # story: all must be pinned at exactly 0
+    assert tier["obs"] == {"compiler_runs_delta": 0, "memo_hits_delta": 0,
+                           "memo_misses_delta": 0}
     # a run reproducing exactly the baseline numbers passes the gate
     payload = _payload(
         speedup=baseline["fused_speedup"],
@@ -269,5 +334,5 @@ def test_committed_baseline_is_well_formed():
         tier_retraces=tier["retraces_after_warmup"],
         tier_compiler_runs=tier["compiler_runs_after_warmup"],
         tier_qps=tier["qps"], tier_p99_ms=tier["p99_ms"],
-        tier_occupancy=tier["batch_occupancy"])
+        tier_occupancy=tier["batch_occupancy"], tier_obs=dict(tier["obs"]))
     assert check_against_baseline(payload, baseline) == []

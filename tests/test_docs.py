@@ -137,16 +137,37 @@ def test_quickstart_api_references_resolve():
     assert checked >= 5, "drift check matched suspiciously few references"
 
 
-def test_serve_lut_cli_smoke():
+def test_serve_lut_cli_smoke(tmp_path):
     """`python -m repro.launch.serve --lut --smoke` end to end: compiles
     model A, drives the tier, and enforces the compile-once contract
-    (the CLI exits non-zero when the counters are non-zero)."""
+    (the CLI exits non-zero when the counters are non-zero).  The
+    ``--metrics-json`` snapshot must carry the docs/observability.md
+    walkthrough's shape: populated stage histograms and compile-pass
+    timings, compile-once counters exactly 0 after warmup."""
+    import json
+
+    metrics = str(tmp_path / "m.json")
     env = dict(os.environ, JAX_PLATFORMS="cpu",
                PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
     proc = subprocess.run(
-        [sys.executable, "-m", "repro.launch.serve", "--lut", "--smoke"],
+        [sys.executable, "-m", "repro.launch.serve", "--lut", "--smoke",
+         "--report-every-s", "0", "--metrics-json", metrics],
         env=env, capture_output=True, text=True, timeout=600, cwd=REPO)
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "compile-once contract" in proc.stdout
     assert "retraces=0" in proc.stdout
     assert "compiler_runs=0" in proc.stdout
+    assert f"metrics snapshot -> {metrics}" in proc.stdout
+    with open(metrics) as f:
+        snap = json.load(f)
+    for name in ("serve_queue_wait_seconds", "serve_assembly_seconds",
+                 "serve_device_seconds", "serve_request_latency_seconds",
+                 "compile_pass_seconds_total", "compile_pass_runs_total",
+                 "engine_compiler_runs_total", "engine_builds_total"):
+        assert snap[name]["series"], f"{name} empty in --metrics-json"
+    for name in ("serve_queue_wait_seconds", "serve_device_seconds"):
+        assert all(s["count"] > 0 for s in snap[name]["series"]), name
+    for name in ("serve_retraces_after_warmup",
+                 "serve_compiler_runs_after_warmup"):
+        assert all(s["value"] == 0 for s in snap[name]["series"]), (
+            f"{name} non-zero: the compile-once serving contract broke")
