@@ -33,7 +33,11 @@ the artifact's table slab byte-exact (sharp), with the engine-vs-uncached
 ``serving_speedup`` timing ratio on the wide interpret tolerance.  The
 ``serving_tier`` section (micro-batching queue over the artifact, see
 docs/serving.md) gates the same sharp compile-once counters plus
-collapse-only floors/ceilings on its closed-loop p99/QPS/occupancy.
+collapse-only floors/ceilings on its closed-loop p99/QPS/occupancy, and
+the ``ingress`` section (open-loop Poisson load through a live localhost
+HTTP ingress, see docs/ingress.md) gates overload behavior — goodput
+held near capacity and rejection-rate nonzero at 3x offered load — the
+same way: sharp counters, collapse-only ratios.
 ``BENCH_*.json`` at the repo root is gitignored, so the committed baseline
 lives under ``benchmarks/baselines/``.
 """
@@ -247,6 +251,7 @@ def lut_network_rows(smoke: bool = False) -> tuple[list[Row], dict]:
     extras["compile"], ctx = compile_stats_case(smoke=smoke)
     extras["serving"] = serving_case(ctx, smoke=smoke)
     extras["serving_tier"] = serving_tier_case(ctx, smoke=smoke)
+    extras["ingress"] = ingress_case(ctx, smoke=smoke)
     return rows, extras
 
 
@@ -518,6 +523,86 @@ def serving_tier_case(ctx, smoke: bool = True) -> dict:
     }
 
 
+def ingress_case(ctx, smoke: bool = True) -> dict:
+    """Open-loop overload behavior through a live localhost HTTP ingress.
+
+    The closed-loop ``serving_tier`` section can only measure equilibrium
+    (its clients slow down when the tier does); this section asks the
+    production question instead — *what happens when offered load exceeds
+    capacity?* — by driving seeded Poisson arrivals
+    (:func:`repro.serve.run_open_loop`) through a real
+    :class:`~repro.serve.HttpIngress` over localhost at three offered
+    loads: below (0.5x), at (1.0x) and above (3.0x) a capacity estimate
+    taken from a short closed-loop run on the same artifact.  The tier's
+    queue bound is deliberately small so overload has to shed: the
+    healthy signature is goodput holding near capacity while the excess
+    is rejected with 503s, never a collapse or a wedged queue.
+
+    Gate split: the compile-once counters stay sharp (HTTP decode,
+    quotas and coalescing must add zero re-traces / compiler runs), and
+    the two overload ratios — ``overload_goodput_ratio`` (goodput at 3x
+    over measured capacity: both sides move with the runner, so the
+    ratio self-normalizes) and ``overload_rejection_rate`` — only gate
+    collapses with wide tolerances.  The below/at-capacity rows are
+    reported for reading, not gated.
+    """
+    from repro import engine as rengine
+    from repro import serve
+
+    cfg, res3 = ctx["cfg"], ctx["res3"]
+    block_b = 16
+    n_requests = 40 if smoke else 120
+    eng = rengine.compile_network(res3, block_b=block_b)
+    tier_kw = dict(max_batch_rows=2 * block_b, flush_deadline_s=0.002)
+
+    # capacity estimate: what the same artifact+tier sustains closed-loop
+    # (timing only — correctness is the load runs' job)
+    cap = serve.run_closed_loop(
+        eng, config=serve.TierConfig(**tier_kw), n_clients=6,
+        n_per_client=max(4, n_requests // 8), rows_min=1, rows_max=8,
+        bw=cfg.bw, seed=0, check_outputs=False)
+    capacity_rps = cap.qps
+
+    # small queue bound so the overload run must shed instead of
+    # buffering the whole burst (32 rows = one max batch of headroom);
+    # 5x offered keeps the queue pinned full even when asyncio smears
+    # the arrival schedule, so the shed fraction stays well off zero
+    tier_cfg = serve.TierConfig(**tier_kw, max_queue_rows=32)
+    levels = {}
+    with serve.BackgroundIngress(eng, tier_cfg) as ing:
+        for name, mult in (("below", 0.5), ("at", 1.0), ("above", 5.0)):
+            rep = serve.run_open_loop(
+                url=ing.url, offered_rps=mult * capacity_rps,
+                n_requests=n_requests, rows_min=1, rows_max=8, bw=cfg.bw,
+                seed=0, verify_net=eng)
+            levels[name] = {
+                "offered_rps": rep.offered_rps,
+                "p50_ms": rep.p50_ms,
+                "p99_ms": rep.p99_ms,
+                "goodput_rps": rep.goodput_rps,
+                "rejection_rate": rep.rejection_rate,
+                "rejected": rep.rejected,
+                "timed_out": rep.timed_out,
+                "outcomes": dict(rep.outcomes),
+            }
+        stats = ing.stats()
+    above = levels["above"]
+    return {
+        "case": "fpga4hep_modelA_generated_level3",
+        "layout": eng.layout,
+        "block_b": block_b,
+        "max_batch_rows": tier_cfg.max_batch_rows,
+        "max_queue_rows": tier_cfg.max_queue_rows,
+        "n_requests": n_requests,
+        "capacity_rps": capacity_rps,
+        "levels": levels,
+        "overload_goodput_ratio": above["goodput_rps"] / capacity_rps,
+        "overload_rejection_rate": above["rejection_rate"],
+        "retraces_after_warmup": stats["retraces_after_warmup"],
+        "compiler_runs_after_warmup": stats["compiler_runs_after_warmup"],
+    }
+
+
 # ---------------------------------------------------------------------------
 # Perf-regression gate (CI bench-smoke): bench JSON vs committed baseline
 # ---------------------------------------------------------------------------
@@ -576,6 +661,19 @@ def baseline_from_payload(payload: dict) -> dict:
             # or touches the legacy memo mid-run), gated by equality
             "obs": dict(payload["serving_tier"]["obs"]),
         },
+        # HTTP ingress under open-loop overload: sharp compile-once
+        # counters through the full network path, collapse-only floors on
+        # the self-normalizing overload ratios
+        "ingress": {
+            "retraces_after_warmup":
+                payload["ingress"]["retraces_after_warmup"],
+            "compiler_runs_after_warmup":
+                payload["ingress"]["compiler_runs_after_warmup"],
+            "overload_goodput_ratio":
+                payload["ingress"]["overload_goodput_ratio"],
+            "overload_rejection_rate":
+                payload["ingress"]["overload_rejection_rate"],
+        },
     }
 
 
@@ -586,7 +684,8 @@ def check_against_baseline(payload: dict, baseline: dict, *,
                            recode_tolerance: float = 0.2,
                            mixed_speedup_tolerance: float = 0.5,
                            serving_speedup_tolerance: float = 0.5,
-                           tier_timing_tolerance: float = 0.5
+                           tier_timing_tolerance: float = 0.5,
+                           ingress_tolerance: float = 0.75
                            ) -> list[str]:
     """Compare a bench payload against the committed baseline.
 
@@ -740,6 +839,32 @@ def check_against_baseline(payload: dict, baseline: dict, *,
                         f"{int(want)} (sharp: registry-observed engine "
                         "counters are deterministic across the closed-loop "
                         "run)")
+    # ingress section (open-loop HTTP overload): sharp compile-once
+    # counters through the full network path; the overload ratios are
+    # open-loop host timings against a per-run capacity estimate — both
+    # sides move with the runner, so the ratios self-normalize, but they
+    # still only gate collapses (goodput falling away under overload, or
+    # the server ceasing to shed at 3x capacity); skips entirely on a
+    # pre-ingress baseline
+    i_base = baseline.get("ingress")
+    if i_base is not None:
+        i_got = payload["ingress"]
+        for fld in ("retraces_after_warmup", "compiler_runs_after_warmup"):
+            if int(i_got[fld]) != int(i_base[fld]):
+                failures.append(
+                    f"ingress {fld} {int(i_got[fld])} != baseline "
+                    f"{int(i_base[fld])} (sharp: HTTP decode, quotas and "
+                    "coalescing must keep the compile-once steady state)")
+        gate("ingress overload_goodput_ratio",
+             i_got["overload_goodput_ratio"],
+             i_base["overload_goodput_ratio"], ingress_tolerance,
+             note="open-loop host-timing tolerance (goodput at 3x offered "
+                  "load over measured capacity)")
+        gate("ingress overload_rejection_rate",
+             i_got["overload_rejection_rate"],
+             i_base["overload_rejection_rate"], ingress_tolerance,
+             note="overload shedding floor (the server must keep "
+                  "rejecting, not buffer or wedge, past capacity)")
     return failures
 
 
@@ -823,6 +948,22 @@ def main() -> None:
             if bd.get(stage, {}).get("count"))
         if legs:
             print(f"# serving_tier latency breakdown (means): {legs}")
+    ing = extras.get("ingress", {})
+    if ing:
+        print(f"# ingress[{ing['case']}]: capacity~{ing['capacity_rps']:.0f} "
+              f"rps closed-loop; open-loop via HTTP:")
+        for name, lv in ing["levels"].items():
+            print(f"#   {name:>5} ({lv['offered_rps']:.0f} rps offered): "
+                  f"p50={lv['p50_ms']:.1f}ms p99={lv['p99_ms']:.1f}ms "
+                  f"goodput={lv['goodput_rps']:.0f} rps "
+                  f"rejection_rate={lv['rejection_rate']:.2f} "
+                  f"outcomes={lv['outcomes']}")
+        print(f"# ingress overload: goodput_ratio="
+              f"{ing['overload_goodput_ratio']:.2f} rejection_rate="
+              f"{ing['overload_rejection_rate']:.2f}; "
+              f"retraces={ing['retraces_after_warmup']} "
+              f"compiler_runs={ing['compiler_runs_after_warmup']} "
+              "after warmup")
 
     payload = {
         "benchmark": "kernel_bench",

@@ -18,6 +18,17 @@ Two serving stacks behind one CLI:
       # quick smoke (CI / drift tests)
       python -m repro.launch.serve --lut --smoke
 
+      # put the HTTP ingress in front (0 = ephemeral port) and serve
+      # until SIGTERM; add a per-tenant row quota
+      python -m repro.launch.serve --lut --http 8080 --tenant-quota 500:1000
+
+      # open-loop (Poisson-arrival) load instead of closed-loop
+      python -m repro.launch.serve --lut --open-loop 300
+
+  ``--http`` + ``--smoke`` (or ``--open-loop``) drives open-loop load
+  *through* a localhost ingress and verifies responses bit-exact — the
+  end-to-end path CI's ingress-smoke step runs (see docs/ingress.md).
+
 * default (no ``--lut``) — the big-model demo: mesh-aware batched LM
   decode, params + caches sharded per parallel/sharding.py, decode step
   jitted with in/out shardings (same core as examples/serve_lm.py).
@@ -26,6 +37,9 @@ Two serving stacks behind one CLI:
 from __future__ import annotations
 
 import argparse
+import json
+import signal
+import threading
 import time
 
 import jax
@@ -104,10 +118,107 @@ def _lut_artifact(args: argparse.Namespace):
     return net, cfg.bw
 
 
+def _parse_quota(spec: str | None):
+    """``--tenant-quota RATE[:BURST]`` -> QuotaConfig (rows/s) or None."""
+    from repro import serve
+
+    if spec is None:
+        return None
+    rate, _, burst = spec.partition(":")
+    return serve.QuotaConfig(rate_rows_per_s=float(rate),
+                             burst_rows=float(burst) if burst else None)
+
+
+def _print_report(rep, st: dict) -> None:
+    """The operator-facing LoadReport + tier-counter dump."""
+    open_loop = rep.n_clients == 0
+    if open_loop:
+        print(f"[serve --lut] {rep.n_requests} open-loop requests offered "
+              f"at {rep.offered_rps:.0f} rps in {rep.wall_s:.2f}s: "
+              f"outcomes={rep.outcomes}, goodput={rep.goodput_rps:.0f} rps, "
+              f"rejection_rate={rep.rejection_rate:.2f}")
+    else:
+        print(f"[serve --lut] {rep.n_requests} requests ({rep.rows} rows) "
+              f"from {rep.n_clients} closed-loop clients in {rep.wall_s:.2f}s")
+    print(f"[serve --lut] latency p50={rep.p50_ms:.2f}ms "
+          f"p90={rep.p90_ms:.2f}ms p99={rep.p99_ms:.2f}ms "
+          f"mean={rep.mean_ms:.2f}ms; qps={rep.qps:.0f} "
+          f"({rep.rows_per_sec:.0f} rows/s)")
+    if st:
+        print(f"[serve --lut] {st['batches']} batches, occupancy "
+              f"{st['batch_occupancy']:.2f} (mean "
+              f"{st['mean_batch_rows']:.1f} rows), "
+              f"flushes={st['flush_causes']}, {st['n_devices']} device(s)"
+              f"{' sharded' if st['sharded'] else ''}")
+    for stage in ("queue_wait", "assembly", "device"):
+        leg = rep.breakdown.get(stage)
+        if leg and leg["count"]:
+            print(f"[serve --lut] {stage}: mean={leg['mean_ms']:.2f}ms "
+                  f"p50={leg['p50_ms']:.2f}ms p99={leg['p99_ms']:.2f}ms")
+
+
+def _dump_report(args: argparse.Namespace, rep) -> None:
+    if args.report_json:
+        with open(args.report_json, "w") as fh:
+            json.dump(rep.as_dict(), fh, indent=2, default=str)
+        print(f"[serve --lut] load report -> {args.report_json}")
+
+
+def _run_http(args: argparse.Namespace, net, bw, tier_cfg) -> dict:
+    """HTTP ingress mode: one-shot open-loop smoke, or serve to SIGTERM."""
+    from repro import serve
+
+    cfg = serve.IngressConfig(port=args.http, quota=_parse_quota(
+        args.tenant_quota))
+    ing = serve.BackgroundIngress(net, tier_cfg, cfg).start()
+    try:
+        print(f"[serve --lut] http ingress listening on {ing.url} "
+              f"(POST /v1/infer, GET /healthz, GET /metrics)", flush=True)
+        if args.smoke or args.open_loop is not None:
+            offered = args.open_loop if args.open_loop is not None else 400.0
+            rep = serve.run_open_loop(
+                url=ing.url, offered_rps=offered,
+                n_requests=args.clients * args.requests_per_client,
+                rows_min=args.rows_min, rows_max=args.rows_max, bw=bw,
+                seed=args.seed, verify_net=net)
+            print("[serve --lut] responses verified bit-exact over HTTP")
+            _print_report(rep, ing.stats())
+            _dump_report(args, rep)
+        else:
+            stop = threading.Event()
+
+            def _drain(signum, frame):
+                print(f"[serve --lut] signal {signum}: draining",
+                      flush=True)
+                stop.set()
+
+            prev = [signal.signal(s, _drain)
+                    for s in (signal.SIGTERM, signal.SIGINT)]
+            try:
+                while not stop.wait(0.5):
+                    pass
+            finally:
+                for s, h in zip((signal.SIGTERM, signal.SIGINT), prev):
+                    signal.signal(s, h)
+    finally:
+        ing.stop()                      # graceful drain
+    return ing.stats()
+
+
 def _run_lut(args: argparse.Namespace) -> None:
-    """Closed-loop load through the micro-batching serving tier."""
+    """Load through the micro-batching tier (optionally via HTTP ingress).
+
+    ``--metrics-json`` dumps in a ``finally`` so an overload run killed
+    by SIGTERM still leaves its snapshot (the default SIGTERM action is
+    re-pointed at ``SystemExit`` for exactly that reason); the HTTP
+    serve-forever mode instead catches SIGTERM for a graceful drain.
+    """
     from repro import obs, serve
 
+    def _term(signum, frame):
+        raise SystemExit(128 + signum)
+
+    signal.signal(signal.SIGTERM, _term)
     net, bw = _lut_artifact(args)
     if args.smoke:
         args.clients, args.requests_per_client = 4, 4
@@ -117,34 +228,38 @@ def _run_lut(args: argparse.Namespace) -> None:
         max_queue_rows=args.max_queue_rows,
         request_timeout_s=(None if args.request_timeout_ms is None
                            else args.request_timeout_ms * 1e-3))
-    with obs.PeriodicReporter(interval_s=args.report_every_s):
-        rep = serve.run_closed_loop(
-            net, config=tier_cfg, n_clients=args.clients,
-            n_per_client=args.requests_per_client, rows_min=args.rows_min,
-            rows_max=args.rows_max, bw=bw, seed=args.seed)
-    st = rep.stats
-    print(f"[serve --lut] {rep.n_requests} requests ({rep.rows} rows) from "
-          f"{rep.n_clients} closed-loop clients in {rep.wall_s:.2f}s")
-    print(f"[serve --lut] latency p50={rep.p50_ms:.2f}ms "
-          f"p90={rep.p90_ms:.2f}ms p99={rep.p99_ms:.2f}ms "
-          f"mean={rep.mean_ms:.2f}ms; qps={rep.qps:.0f} "
-          f"({rep.rows_per_sec:.0f} rows/s)")
-    print(f"[serve --lut] {st['batches']} batches, occupancy "
-          f"{st['batch_occupancy']:.2f} (mean {st['mean_batch_rows']:.1f} "
-          f"rows), flushes={st['flush_causes']}, "
-          f"{st['n_devices']} device(s){' sharded' if st['sharded'] else ''}")
-    for stage in ("queue_wait", "assembly", "device"):
-        leg = rep.breakdown.get(stage)
-        if leg and leg["count"]:
-            print(f"[serve --lut] {stage}: mean={leg['mean_ms']:.2f}ms "
-                  f"p50={leg['p50_ms']:.2f}ms p99={leg['p99_ms']:.2f}ms")
-    print(f"[serve --lut] compile-once contract: "
-          f"retraces={st['retraces_after_warmup']} "
-          f"compiler_runs={st['compiler_runs_after_warmup']} after warmup")
-    print("[serve --lut]", obs.summary_line())
-    if args.metrics_json:
-        obs.registry().dump_json(args.metrics_json)
-        print(f"[serve --lut] metrics snapshot -> {args.metrics_json}")
+    try:
+        with obs.PeriodicReporter(interval_s=args.report_every_s):
+            if args.http is not None:
+                st = _run_http(args, net, bw, tier_cfg)
+            elif args.open_loop is not None:
+                rep = serve.run_open_loop(
+                    net, config=tier_cfg, offered_rps=args.open_loop,
+                    n_requests=args.clients * args.requests_per_client,
+                    rows_min=args.rows_min, rows_max=args.rows_max, bw=bw,
+                    seed=args.seed)
+                st = rep.stats
+                _print_report(rep, st)
+                _dump_report(args, rep)
+            else:
+                rep = serve.run_closed_loop(
+                    net, config=tier_cfg, n_clients=args.clients,
+                    n_per_client=args.requests_per_client,
+                    rows_min=args.rows_min, rows_max=args.rows_max, bw=bw,
+                    seed=args.seed)
+                st = rep.stats
+                _print_report(rep, st)
+                _dump_report(args, rep)
+        print(f"[serve --lut] compile-once contract: "
+              f"retraces={st['retraces_after_warmup']} "
+              f"compiler_runs={st['compiler_runs_after_warmup']} "
+              f"after warmup")
+        print("[serve --lut]", obs.summary_line())
+    finally:
+        if args.metrics_json:
+            obs.registry().dump_json(args.metrics_json)
+            print(f"[serve --lut] metrics snapshot -> {args.metrics_json}",
+                  flush=True)
     if st["retraces_after_warmup"] or st["compiler_runs_after_warmup"]:
         raise SystemExit("compile-once contract violated in steady state")
 
@@ -178,6 +293,23 @@ def main() -> None:
                     help="bounded-queue backpressure limit")
     ap.add_argument("--request-timeout-ms", type=float, default=None,
                     help="per-request launch deadline (default: none)")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="put the HTTP ingress in front of the tier on "
+                    "this port (0 = ephemeral; the bound port is printed). "
+                    "With --smoke/--open-loop: one-shot verified load "
+                    "through the ingress; otherwise serve until SIGTERM "
+                    "with a graceful drain (see docs/ingress.md)")
+    ap.add_argument("--tenant-quota", default=None, metavar="RATE[:BURST]",
+                    help="per-tenant token-bucket admission quota in "
+                    "rows/s (burst defaults to one second of rate); "
+                    "requests over quota get HTTP 429")
+    ap.add_argument("--open-loop", type=float, default=None, metavar="RPS",
+                    help="use the open-loop Poisson-arrival generator at "
+                    "this offered load instead of closed-loop clients "
+                    "(total requests stays clients * requests-per-client)")
+    ap.add_argument("--report-json", default=None, metavar="PATH",
+                    help="dump the LoadReport (latencies, goodput, "
+                    "outcome breakdown) as JSON")
     ap.add_argument("--input-bw", type=int, default=2,
                     help="synthetic request code width when serving a "
                     "saved --artifact (codes are uniform in [0, 2**bw); "

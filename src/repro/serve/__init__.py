@@ -6,17 +6,29 @@ continuous queue that coalesces concurrent requests into
 ``block_b``-bucketed batches, shards the batch axis across devices with
 ``jax.sharding`` when more than one device exists, applies bounded-queue
 backpressure and per-request timeouts, and degrades gracefully to a plain
-single-device engine call.  See docs/serving.md for the lifecycle and
-knobs, ``python -m repro.launch.serve --lut`` for the CLI front-end, and
-the bench's ``serving_tier`` section for the gated p50/p99/QPS numbers.
+single-device engine call.  :class:`HttpIngress` puts a network front
+door on the tier (JSON / raw-int8 over HTTP, per-tenant token-bucket
+quotas, typed 429/503/408 mappings, ``/metrics`` + ``/healthz``), and
+the load generators measure it both closed-loop (steady state) and
+open-loop (Poisson arrivals — behavior *under overload*).  See
+docs/serving.md and docs/ingress.md for the lifecycle and knobs,
+``python -m repro.launch.serve --lut`` for the CLI front-end, and the
+bench's ``serving_tier`` / ``ingress`` sections for the gated numbers.
 """
 
+from repro.serve.ingress import (BackgroundIngress, HttpIngress,
+                                 IngressConfig, QuotaConfig, QuotaExceeded,
+                                 TokenBucket, http_infer)
 from repro.serve.loadgen import (LoadReport, make_requests,
-                                 run_closed_loop)
+                                 poisson_arrivals, run_closed_loop,
+                                 run_open_loop)
 from repro.serve.tier import (RequestTimeout, ServingTier, TierClosed,
                               TierConfig, TierError, TierOverloaded,
                               run_requests, serve_once)
 
-__all__ = ["LoadReport", "RequestTimeout", "ServingTier", "TierClosed",
-           "TierConfig", "TierError", "TierOverloaded", "make_requests",
-           "run_closed_loop", "run_requests", "serve_once"]
+__all__ = ["BackgroundIngress", "HttpIngress", "IngressConfig",
+           "LoadReport", "QuotaConfig", "QuotaExceeded", "RequestTimeout",
+           "ServingTier", "TierClosed", "TierConfig", "TierError",
+           "TierOverloaded", "TokenBucket", "http_infer", "make_requests",
+           "poisson_arrivals", "run_closed_loop", "run_open_loop",
+           "run_requests", "serve_once"]

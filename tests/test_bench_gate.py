@@ -27,7 +27,8 @@ def _payload(speedup=2.5, l2_pct=17.2, l2_bytes=53912, l3_pct=17.2,
              retraces=0, compiler_runs=0, artifact_bytes=37504,
              serving_speedup=50.0, tier_retraces=0, tier_compiler_runs=0,
              tier_qps=1000.0, tier_p99_ms=8.0, tier_occupancy=0.75,
-             tier_obs=None):
+             tier_obs=None, ing_retraces=0, ing_compiler_runs=0,
+             ing_goodput_ratio=0.3, ing_rejection_rate=0.5):
     """Bench-JSON shape with only the gated quantities filled in."""
     if tier_obs is None:
         tier_obs = {"compiler_runs_delta": 0, "memo_hits_delta": 0,
@@ -60,6 +61,12 @@ def _payload(speedup=2.5, l2_pct=17.2, l2_bytes=53912, l3_pct=17.2,
             "p99_ms": tier_p99_ms,
             "batch_occupancy": tier_occupancy,
             "obs": tier_obs,
+        },
+        "ingress": {
+            "retraces_after_warmup": ing_retraces,
+            "compiler_runs_after_warmup": ing_compiler_runs,
+            "overload_goodput_ratio": ing_goodput_ratio,
+            "overload_rejection_rate": ing_rejection_rate,
         },
     }
 
@@ -227,6 +234,44 @@ def test_gate_tolerates_pre_tier_baseline():
     assert check_against_baseline(_payload(), baseline) == []
 
 
+def test_gate_fails_on_ingress_retrace_or_recompile():
+    # the HTTP ingress path (decode -> quota -> tier) inherits the sharp
+    # compile-once contract end to end
+    baseline = baseline_from_payload(_payload())
+    failures = check_against_baseline(_payload(ing_retraces=1), baseline)
+    assert any("ingress retraces_after_warmup" in f
+               for f in failures), failures
+    failures = check_against_baseline(_payload(ing_compiler_runs=2),
+                                      baseline)
+    assert any("ingress compiler_runs_after_warmup" in f
+               for f in failures), failures
+
+
+def test_gate_ingress_overload_collapse_only():
+    # the overload ratios are open-loop host timings with the widest
+    # tolerance in the file (75%): drift passes, a collapse — goodput
+    # falling away under overload, or the server ceasing to shed past
+    # capacity — trips
+    baseline = baseline_from_payload(
+        _payload(ing_goodput_ratio=0.4, ing_rejection_rate=0.6))
+    noisy = _payload(ing_goodput_ratio=0.15, ing_rejection_rate=0.2)
+    assert check_against_baseline(noisy, baseline) == []
+    failures = check_against_baseline(_payload(ing_goodput_ratio=0.05),
+                                      baseline)
+    assert any("overload_goodput_ratio" in f for f in failures), failures
+    failures = check_against_baseline(_payload(ing_rejection_rate=0.0),
+                                      baseline)
+    assert any("overload_rejection_rate" in f for f in failures), failures
+
+
+def test_gate_tolerates_pre_ingress_baseline():
+    # a baseline recorded before the ingress section existed must not
+    # fail the gate on the new quantities
+    baseline = baseline_from_payload(_payload())
+    del baseline["ingress"]
+    assert check_against_baseline(_payload(), baseline) == []
+
+
 def test_gate_refuses_protocol_mismatch():
     # a full-mode or TPU run is not comparable with the smoke/cpu baseline
     baseline = baseline_from_payload(_payload())
@@ -317,6 +362,13 @@ def test_committed_baseline_is_well_formed():
     # story: all must be pinned at exactly 0
     assert tier["obs"] == {"compiler_runs_delta": 0, "memo_hits_delta": 0,
                            "memo_misses_delta": 0}
+    # the ingress section: sharp counters through the HTTP path, and
+    # overload behavior that actually sheds while keeping goodput
+    ing = baseline["ingress"]
+    assert ing["retraces_after_warmup"] == 0
+    assert ing["compiler_runs_after_warmup"] == 0
+    assert 0.0 < ing["overload_goodput_ratio"] <= 1.0
+    assert 0.0 < ing["overload_rejection_rate"] < 1.0
     # a run reproducing exactly the baseline numbers passes the gate
     payload = _payload(
         speedup=baseline["fused_speedup"],
@@ -334,5 +386,9 @@ def test_committed_baseline_is_well_formed():
         tier_retraces=tier["retraces_after_warmup"],
         tier_compiler_runs=tier["compiler_runs_after_warmup"],
         tier_qps=tier["qps"], tier_p99_ms=tier["p99_ms"],
-        tier_occupancy=tier["batch_occupancy"], tier_obs=dict(tier["obs"]))
+        tier_occupancy=tier["batch_occupancy"], tier_obs=dict(tier["obs"]),
+        ing_retraces=ing["retraces_after_warmup"],
+        ing_compiler_runs=ing["compiler_runs_after_warmup"],
+        ing_goodput_ratio=ing["overload_goodput_ratio"],
+        ing_rejection_rate=ing["overload_rejection_rate"])
     assert check_against_baseline(payload, baseline) == []

@@ -90,6 +90,13 @@ def test_documented_cli_flags_exist():
     assert any(p == "python -m benchmarks.kernel_bench" for _, p, _ in cmds)
     assert any(p == "python -m repro.launch.serve" and "--lut" in flags
                for _, p, flags in cmds)
+    # the HTTP ingress front door (docs/ingress.md) stays documented
+    assert any(p == "python -m repro.launch.serve" and "--http" in flags
+               for _, p, flags in cmds)
+    assert any(p == "python -m repro.launch.serve"
+               and "--tenant-quota" in flags for _, p, flags in cmds)
+    assert any(p == "python tools/check_docs.py" and "--pydoctest" in flags
+               for _, p, flags in cmds)
     declared = {p: _declared_flags(src) for p, src in CLI_SOURCES.items()}
     for doc, prefix, flags in cmds:
         missing = flags - declared[prefix]

@@ -13,11 +13,17 @@ Two checks, no third-party deps, shared by CI's ``docs`` job and
   given markdown files is executed, blocks within one file sharing a
   namespace (so examples can build on each other).  A fence that should
   not run is simply not tagged ``python`` (use ``text``/``bash``).
+* ``--pydoctest <modules>`` — run stdlib ``doctest`` over the named
+  importable modules, so the ``>>>`` examples in API docstrings
+  (``ServingTier.infer``, ``run_closed_loop``, ``run_open_loop``) stay
+  runnable alongside the markdown tree.
 
 Usage (what CI runs)::
 
     python tools/check_docs.py --links docs ROADMAP.md CHANGES.md \
-                               --doctest docs
+                               --doctest docs \
+                               --pydoctest repro.serve.tier \
+                                           repro.serve.loadgen
 """
 
 from __future__ import annotations
@@ -135,16 +141,43 @@ def run_doctests(paths: list[str]) -> list[str]:
     return errors
 
 
+def run_pydoctests(modules: list[str]) -> list[str]:
+    """Stdlib ``doctest`` over importable modules' ``>>>`` examples."""
+    import doctest
+    import importlib
+
+    errors: list[str] = []
+    for name in modules:
+        try:
+            mod = importlib.import_module(name)
+        except Exception as exc:
+            errors.append(f"{name}: import failed: {exc!r}")
+            continue
+        res = doctest.testmod(mod)
+        if res.failed:
+            errors.append(
+                f"{name}: {res.failed}/{res.attempted} doctest(s) failed")
+        else:
+            print(f"[check_docs] {name}: {res.attempted} doctest "
+                  "example(s) OK")
+    return errors
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--links", nargs="+", default=[], metavar="PATH",
                     help="markdown files/dirs to link-check")
     ap.add_argument("--doctest", nargs="+", default=[], metavar="PATH",
                     help="markdown files/dirs whose ```python fences run")
+    ap.add_argument("--pydoctest", nargs="+", default=[], metavar="MODULE",
+                    help="importable modules whose >>> docstring examples "
+                    "run under stdlib doctest")
     args = ap.parse_args(argv)
     errors = check_links(args.links)
     if not errors:  # broken docs would make the examples misleading anyway
         errors += run_doctests(args.doctest)
+    if not errors:
+        errors += run_pydoctests(args.pydoctest)
     for err in errors:
         print(f"[check_docs] FAIL {err}", file=sys.stderr)
     if not errors:
