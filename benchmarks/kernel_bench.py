@@ -252,6 +252,7 @@ def lut_network_rows(smoke: bool = False) -> tuple[list[Row], dict]:
     extras["serving"] = serving_case(ctx, smoke=smoke)
     extras["serving_tier"] = serving_tier_case(ctx, smoke=smoke)
     extras["ingress"] = ingress_case(ctx, smoke=smoke)
+    extras["autotune"] = autotune_case(ctx, smoke=smoke)
     return rows, extras
 
 
@@ -603,6 +604,67 @@ def ingress_case(ctx, smoke: bool = True) -> dict:
     }
 
 
+def autotune_case(ctx, smoke: bool = True) -> dict:
+    """Compile-time variant autotuner on generated model A at level 3.
+
+    ``compile_network(..., autotune=True)`` enumerates the eligible plan
+    variants (layout x block_b x pack), times each one's jitted forward
+    on this backend, and serves the measured winner.  The section records
+    the full timing table plus the two contract numbers the gate tracks:
+
+    * ``compiler_runs_after_warmup`` — the search runs on the *already
+      compiled* level-3 result handed over from ``compile_stats_case``,
+      so it must add exactly 0 truth-table compiler runs (sharp gate);
+    * ``speedup_vs_default`` — chosen-variant time over the heuristic
+      default's time from the *same* timing table.  >= 1.0 by
+      construction (the search minimizes over a set containing the
+      default), so the gate is collapse-only: a drop below ~1/(1+tol)
+      means the selection logic regressed, not that the runner was slow.
+
+    The chosen/default variant *keys* are recorded for reading but not
+    equality-gated — on a noisy shared runner near-tied variants can
+    legitimately swap places between runs.
+    """
+    from repro import engine as rengine
+
+    cfg, res3 = ctx["cfg"], ctx["res3"]
+    # smoke sweeps two batch tiles to keep CI quick; full mode takes the
+    # kernels' default sweep
+    block_bs = (64, 128) if smoke else None
+    runs0 = rengine.compile_runs()
+    t0 = time.perf_counter()
+    eng = rengine.compile_network(res3, block_b=128, autotune=True,
+                                  autotune_block_bs=block_bs)
+    search_s = time.perf_counter() - t0
+    compiler_runs = rengine.compile_runs() - runs0
+
+    plan = eng.plan
+    chosen = plan.variant.key
+    default = plan.default_key or chosen
+    # bit-exactness of the winner against the per-layer reference
+    codes = jnp.asarray(np.random.default_rng(0).integers(
+        0, 2 ** cfg.bw, (128, cfg.in_features), dtype=np.int32))
+    want = np.asarray(network_table_forward(ctx["tables"], codes))
+    np.testing.assert_array_equal(np.asarray(eng(codes)), want)
+
+    return {
+        "case": "fpga4hep_modelA_generated_level3",
+        "source": plan.source,
+        "chosen": chosen,
+        "default": default,
+        "chosen_layout": plan.layout,
+        "chosen_block_b": plan.block_b,
+        "chosen_pack": plan.pack,
+        "n_variants": len(plan.timings_us),
+        "batch": plan.batch,
+        "timings_us": dict(plan.timings_us),
+        "search_seconds": search_s,
+        "speedup_vs_default": (plan.timings_us[default]
+                               / plan.timings_us[chosen]),
+        "compiler_runs_after_warmup": compiler_runs,
+    }
+
+
 # ---------------------------------------------------------------------------
 # Perf-regression gate (CI bench-smoke): bench JSON vs committed baseline
 # ---------------------------------------------------------------------------
@@ -673,6 +735,16 @@ def baseline_from_payload(payload: dict) -> dict:
                 payload["ingress"]["overload_goodput_ratio"],
             "overload_rejection_rate":
                 payload["ingress"]["overload_rejection_rate"],
+        },
+        # compile-time variant autotuner: the search must add zero
+        # truth-table compiler runs (sharp), enumerate the same variant
+        # count (sharp), and pick a plan no slower than the heuristic
+        # default (collapse-only floor; the keys themselves are noisy)
+        "autotune": {
+            "compiler_runs_after_warmup":
+                payload["autotune"]["compiler_runs_after_warmup"],
+            "n_variants": payload["autotune"]["n_variants"],
+            "speedup_vs_default": payload["autotune"]["speedup_vs_default"],
         },
     }
 
@@ -865,6 +937,36 @@ def check_against_baseline(payload: dict, baseline: dict, *,
              i_base["overload_rejection_rate"], ingress_tolerance,
              note="overload shedding floor (the server must keep "
                   "rejecting, not buffer or wedge, past capacity)")
+    # autotune section (compile-time variant search): the search reuses
+    # the already-compiled optimize result, so the compiler-run delta is
+    # sharp; the variant count is deterministic for a fixed sweep (sharp);
+    # speedup_vs_default is chosen-over-default from one timing table —
+    # >= 1.0 by construction, so only a collapse (selection logic picking
+    # a measurably slower plan) can trip the floor.  The chosen/default
+    # keys are deliberately not equality-gated: near-tied variants swap
+    # places run to run on shared runners.  Skips entirely on a
+    # pre-autotune baseline.
+    a_base = baseline.get("autotune")
+    if a_base is not None:
+        a_got = payload["autotune"]
+        if (int(a_got["compiler_runs_after_warmup"])
+                != int(a_base["compiler_runs_after_warmup"])):
+            failures.append(
+                f"autotune compiler_runs_after_warmup "
+                f"{int(a_got['compiler_runs_after_warmup'])} != baseline "
+                f"{int(a_base['compiler_runs_after_warmup'])} (sharp: the "
+                "variant search must reuse the compiled result, never "
+                "re-run the truth-table compiler)")
+        if int(a_got["n_variants"]) != int(a_base["n_variants"]):
+            failures.append(
+                f"autotune n_variants {int(a_got['n_variants'])} != "
+                f"baseline {int(a_base['n_variants'])} (sharp: the "
+                "enumerated variant space is deterministic for a fixed "
+                "sweep — a drop means eligible variants went missing)")
+        gate("autotune speedup_vs_default", a_got["speedup_vs_default"],
+             a_base["speedup_vs_default"], mixed_speedup_tolerance,
+             note="selection floor (chosen variant vs heuristic default "
+                  "from the same timing table; >= 1.0 by construction)")
     return failures
 
 
@@ -964,6 +1066,17 @@ def main() -> None:
               f"retraces={ing['retraces_after_warmup']} "
               f"compiler_runs={ing['compiler_runs_after_warmup']} "
               "after warmup")
+    at = extras.get("autotune", {})
+    if at:
+        print(f"# autotune[{at['case']}]: chose {at['chosen']} "
+              f"({at['timings_us'][at['chosen']]:.0f} us/call) over "
+              f"default {at['default']} "
+              f"({at['timings_us'][at['default']]:.0f} us/call), "
+              f"{at['speedup_vs_default']:.2f}x, {at['n_variants']} "
+              f"variants timed at batch={at['batch']} in "
+              f"{at['search_seconds']:.1f}s; "
+              f"compiler_runs={at['compiler_runs_after_warmup']} "
+              "during search")
 
     payload = {
         "benchmark": "kernel_bench",

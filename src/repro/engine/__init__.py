@@ -8,13 +8,20 @@ flags on ``ops.lut_network`` / ``table_infer.network_table_forward`` /
 ``logicnet.verify_tables`` / ``logicnet.sparse_head_forward`` are thin
 compatibility wrappers over this one code path (memoized via
 ``cached_compile``).
+
+``compile_network(..., autotune=True)`` swaps the static layout heuristic
+for measurement: every eligible plan variant is timed on the actual
+backend and the winning :class:`ExecutionPlan` (with its timing table)
+persists in the artifact, so deployment replays it with zero search
+(``repro.engine.autotune``).
 """
 
+from repro.engine.autotune import ExecutionPlan, autotune_network
 from repro.engine.engine import (ARTIFACT_KIND, FORMAT_VERSION,
                                  CompiledLUTNet, cache_clear, cache_size,
                                  cached_compile, compile_network,
                                  compile_runs, load)
 
 __all__ = ["ARTIFACT_KIND", "FORMAT_VERSION", "CompiledLUTNet",
-           "cache_clear", "cache_size", "cached_compile", "compile_network",
-           "compile_runs", "load"]
+           "ExecutionPlan", "autotune_network", "cache_clear", "cache_size",
+           "cached_compile", "compile_network", "compile_runs", "load"]

@@ -11,7 +11,7 @@ ahead-of-time half of the deployment story:
     net = engine.compile_network(tables, optimize_level=3,
                                  in_features=cfg.in_features)
     out = net(codes)              # jitted, zero re-trace, zero re-compile
-    net.plan                      # the FusedPlan that chose the layout
+    net.plan                      # the ExecutionPlan that chose the layout
     net.stats                     # CompileStats from the one optimize run
     net.vmem_breakdown()          # per-slab VMEM bytes
     net.save("model_a.npz")       # deployment skips the compiler entirely
@@ -34,7 +34,8 @@ share a single trace.
 Serialization rides the checkpoint manifest machinery
 (``checkpoint.ckpt.save_arrays`` / ``load_arrays``): one ``.npz`` holding
 the slab arrays plus a JSON metadata record (layout, static per-layer
-shape metadata, the FusedPlan, and the CompileStats of the build).
+shape metadata, the ExecutionPlan — variant, source and autotune timing
+table — and the CompileStats of the build).
 """
 
 from __future__ import annotations
@@ -51,8 +52,9 @@ import jax.numpy as jnp
 from repro import obs
 from repro.checkpoint.ckpt import load_arrays, save_arrays
 from repro.compile.pipeline import CompileStats, OptimizeResult
+from repro.engine.autotune import ExecutionPlan, autotune_network
 from repro.kernels import ref
-from repro.kernels.lut_lookup import lut_lookup_pallas
+from repro.kernels.lut_lookup import DEFAULT_BLOCK_B, lut_lookup_pallas
 from repro.kernels.lut_network import (LayerMeta, MixedGroupMeta,
                                        MixedLayerMeta, MixedNetworkSlabs,
                                        NetworkSlabs,
@@ -60,10 +62,13 @@ from repro.kernels.lut_network import (LayerMeta, MixedGroupMeta,
                                        build_network_slabs,
                                        lut_network_mixed_pallas,
                                        lut_network_pallas)
-from repro.kernels.ops import (FUSED_VMEM_BUDGET_BYTES, FusedPlan,
-                               fused_plan)
+from repro.kernels.plan import (FUSED_VMEM_BUDGET_BYTES, FusedPlan,
+                                fused_plan)
 
-FORMAT_VERSION = 1
+# format 2 (ExecutionPlan refactor): meta["plan"] is the full ExecutionPlan
+# record (variant + autotune timing table); format-1 artifacts carried the
+# bare FusedPlan and load() synthesizes their default plan
+FORMAT_VERSION = 2
 ARTIFACT_KIND = "repro.engine.CompiledLUTNet"
 
 # process-wide count of optimize() runs issued by this module; serving
@@ -166,9 +171,14 @@ class CompiledLUTNet:
       compatibility; jitted but kernel-free).
 
     Exactly one of ``slabs`` / ``layers`` is populated.  ``plan`` is the
-    ``FusedPlan`` that made the decision, ``stats`` the ``CompileStats``
-    of the single ``repro.compile.optimize`` run (None when the build
-    skipped the compiler).  The artifact is bit-exact with
+    :class:`~repro.engine.autotune.ExecutionPlan` that made the decision
+    — heuristic, autotuned or synthesized from a pre-autotune artifact;
+    its compat properties (``plan.reason``, ``plan.slab_bytes``, ...)
+    keep the old bare-``FusedPlan`` surface working, and ``layout`` /
+    ``block_b`` here always mirror ``plan.layout`` / ``plan.block_b``.
+    ``stats`` is the ``CompileStats`` of the single
+    ``repro.compile.optimize`` run (None when the build skipped the
+    compiler).  The artifact is bit-exact with
     ``table_infer.network_table_forward`` on the stack it was built from.
     """
 
@@ -176,7 +186,7 @@ class CompiledLUTNet:
     n_in: int
     n_out: int
     block_b: int
-    plan: FusedPlan
+    plan: ExecutionPlan
     stats: CompileStats | None
     slabs: NetworkSlabs | MixedNetworkSlabs | None = None
     layers: tuple[tuple[jax.Array, jax.Array, int], ...] | None = None
@@ -258,7 +268,7 @@ class CompiledLUTNet:
             "kind": ARTIFACT_KIND, "format": FORMAT_VERSION,
             "layout": self.layout, "n_in": self.n_in, "n_out": self.n_out,
             "block_b": self.block_b,
-            "plan": dataclasses.asdict(self.plan),
+            "plan": self.plan.as_dict(),
             "stats": None if self.stats is None else self.stats.as_dict(),
         }
         arrays: dict[str, np.ndarray] = {}
@@ -302,9 +312,16 @@ def load(path: str) -> CompiledLUTNet:
         raise ValueError(
             f"{path} has artifact format {meta['format']}; this build "
             f"reads <= {FORMAT_VERSION}")
-    plan_fields = {f.name for f in dataclasses.fields(FusedPlan)}
-    plan = FusedPlan(**{k: v for k, v in meta["plan"].items()
-                        if k in plan_fields})
+    pd = meta["plan"]
+    if "variant" in pd:
+        plan = ExecutionPlan.from_dict(pd)
+    else:
+        # format-1 artifact: the record is a bare FusedPlan — synthesize
+        # the default plan so the loaded artifact speaks the new surface
+        # (zero search, zero compiler runs, bit-exact slabs as always)
+        plan = ExecutionPlan.from_fused(
+            FusedPlan.from_dict(pd), meta["layout"], int(meta["block_b"]),
+            source="synthesized")
     stats = (None if meta["stats"] is None
              else CompileStats.from_dict(meta["stats"]))
     layout = meta["layout"]
@@ -361,9 +378,10 @@ def _as_triples(layers) -> list[tuple[np.ndarray, np.ndarray, int]]:
 
 def compile_network(layers, *, optimize_level: int | None = None,
                     in_features: int | None = None, fused: bool = True,
-                    use_pallas: bool = True, block_b: int = 128,
-                    vmem_budget_bytes: int = FUSED_VMEM_BUDGET_BYTES
-                    ) -> CompiledLUTNet:
+                    use_pallas: bool = True, block_b: int = DEFAULT_BLOCK_B,
+                    vmem_budget_bytes: int = FUSED_VMEM_BUDGET_BYTES,
+                    autotune: bool = False, autotune_codes=None,
+                    autotune_block_bs=None) -> CompiledLUTNet:
     """Compile a sparse LUT stack into a serving artifact, once.
 
     ``layers`` is a ``LayerTruthTable`` list, a sequence of
@@ -381,6 +399,18 @@ def compile_network(layers, *, optimize_level: int | None = None,
        when eligible;
     3. otherwise fall back to the jitted per-layer chain (``use_pallas=
        False`` pins the plain-jnp reference chain instead).
+
+    ``autotune=True`` replaces the static ladder with measurement: every
+    eligible :class:`~repro.kernels.plan.PlanVariant` (layout x block_b x
+    pack) is built and its jitted forward timed on the actual backend
+    (see ``repro.engine.autotune``), and the artifact carries the winner
+    plus the full timing table — ``save``/``load`` replay it with zero
+    search.  ``autotune_codes`` supplies the representative batch
+    (None: seeded synthetic codes); ``autotune_block_bs`` overrides the
+    ``block_b`` sweep (the requested ``block_b`` always joins it, so the
+    heuristic default stays among the candidates).  ``autotune`` is
+    ignored when the caller pinned the path with ``fused=False`` or
+    ``use_pallas=False`` — there is nothing left to search.
 
     ``in_features`` is the served input bus width (``codes.shape[-1]``);
     defaults to the widest first-layer index + 1.
@@ -407,20 +437,44 @@ def compile_network(layers, *, optimize_level: int | None = None,
             _M_COMPILER_RUNS.inc()
     stats = res.stats if res is not None else None
 
+    if autotune and use_pallas and fused:
+        mixed = res.mixed_tables if res is not None else None
+        if res is not None:
+            triples = [(tt.indices, tt.table, tt.bw_in)
+                       for tt in res.tables]
+            if in_features is None:
+                in_features = res.cnet.in_features
+        # search cost is observed by autotune's own histogram
+        # (engine_autotune_seconds), not the slab-build one
+        plan, built = autotune_network(
+            triples, mixed, in_features=in_features, block_b=block_b,
+            vmem_budget_bytes=vmem_budget_bytes, codes=autotune_codes,
+            block_bs=autotune_block_bs)
+        _M_BUILDS.labels(layout=plan.layout).inc()
+        if plan.layout in ("mixed", "uniform"):
+            return CompiledLUTNet(layout=plan.layout, n_in=in_features,
+                                  n_out=built.n_out, block_b=plan.block_b,
+                                  plan=plan, stats=stats, slabs=built)
+        n_out = int(np.asarray(triples[-1][1]).shape[0])
+        return CompiledLUTNet(layout="per_layer", n_in=in_features,
+                              n_out=n_out, block_b=plan.block_b, plan=plan,
+                              stats=stats, layers=built)
+
     if res is not None and use_pallas and fused:
         mixed = res.mixed_tables
-        plan = fused_plan(mixed, vmem_budget_bytes)
-        if plan.fused:
+        cost = fused_plan(mixed, vmem_budget_bytes)
+        if cost.fused:
             t0 = time.perf_counter()
-            slabs = build_mixed_network_slabs(mixed, pack=plan.pack)
+            slabs = build_mixed_network_slabs(mixed, pack=cost.pack)
             _M_SLAB_BUILD.observe(time.perf_counter() - t0)
             _M_BUILDS.labels(layout="mixed").inc()
             return CompiledLUTNet(
                 layout="mixed",
                 n_in=res.cnet.in_features if in_features is None
                 else in_features,
-                n_out=slabs.n_out, block_b=block_b, plan=plan, stats=stats,
-                slabs=slabs)
+                n_out=slabs.n_out, block_b=block_b,
+                plan=ExecutionPlan.from_fused(cost, "mixed", block_b),
+                stats=stats, slabs=slabs)
     if res is not None:
         # the padded uniform lowering is only materialized once the mixed
         # fused path has been ruled out (same fall-through as the legacy
@@ -432,17 +486,20 @@ def compile_network(layers, *, optimize_level: int | None = None,
             in_features = res.cnet.in_features
     n_out = int(np.asarray(triples[-1][1]).shape[0])
 
-    plan = fused_plan(triples, vmem_budget_bytes)
+    cost = fused_plan(triples, vmem_budget_bytes)
     if not use_pallas or not fused:
-        plan = dataclasses.replace(plan, fused=False, reason="fused_disabled")
-    if use_pallas and plan.fused:
+        cost = dataclasses.replace(cost, fused=False,
+                                   reason="fused_disabled")
+    if use_pallas and cost.fused:
         t0 = time.perf_counter()
-        slabs = build_network_slabs(triples, pack=plan.pack)
+        slabs = build_network_slabs(triples, pack=cost.pack)
         _M_SLAB_BUILD.observe(time.perf_counter() - t0)
         _M_BUILDS.labels(layout="uniform").inc()
-        return CompiledLUTNet(layout="uniform", n_in=in_features,
-                              n_out=slabs.n_out, block_b=block_b, plan=plan,
-                              stats=stats, slabs=slabs)
+        return CompiledLUTNet(
+            layout="uniform", n_in=in_features, n_out=slabs.n_out,
+            block_b=block_b,
+            plan=ExecutionPlan.from_fused(cost, "uniform", block_b),
+            stats=stats, slabs=slabs)
     t0 = time.perf_counter()
     jl = tuple((jnp.asarray(np.asarray(i, dtype=np.int32)),
                 jnp.asarray(np.asarray(t, dtype=np.int32)), int(b))
@@ -450,9 +507,10 @@ def compile_network(layers, *, optimize_level: int | None = None,
     _M_SLAB_BUILD.observe(time.perf_counter() - t0)
     layout = "per_layer" if use_pallas else "reference"
     _M_BUILDS.labels(layout=layout).inc()
-    return CompiledLUTNet(layout=layout,
-                          n_in=in_features, n_out=n_out, block_b=block_b,
-                          plan=plan, stats=stats, layers=jl)
+    return CompiledLUTNet(
+        layout=layout, n_in=in_features, n_out=n_out, block_b=block_b,
+        plan=ExecutionPlan.from_fused(cost, layout, block_b),
+        stats=stats, layers=jl)
 
 
 # ---------------------------------------------------------------------------

@@ -1,3 +1,22 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+# the execution-plan machinery is the package's public surface: one
+# block_b source of truth plus the variant space the engine autotunes
+# over (see repro.kernels.plan)
+from repro.kernels.lut_lookup import DEFAULT_BLOCK_B
+from repro.kernels.plan import (DEFAULT_BLOCK_BS, FUSED_VMEM_BUDGET_BYTES,
+                                FusedPlan, PlanVariant, default_variant,
+                                enumerate_variants, fused_plan)
+
+__all__ = [
+    "DEFAULT_BLOCK_B",
+    "DEFAULT_BLOCK_BS",
+    "FUSED_VMEM_BUDGET_BYTES",
+    "FusedPlan",
+    "PlanVariant",
+    "default_variant",
+    "enumerate_variants",
+    "fused_plan",
+]

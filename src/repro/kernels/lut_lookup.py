@@ -25,6 +25,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# The batch tile every kernel (and the engine) defaults to.  This is the
+# single source of truth — ops.py, the plan machinery and the serving tier
+# all consume it (re-exported as ``repro.kernels.DEFAULT_BLOCK_B``), so an
+# ``ExecutionPlan``'s ``block_b`` is the only other place the tile lives.
+DEFAULT_BLOCK_B = 128
+
 
 def pack_fan_in_entries(codes: jax.Array, idx: jax.Array,
                         bw_in: int) -> jax.Array:
@@ -104,7 +110,8 @@ def _kernel(codes_ref, idx_ref, table_ref, out_ref, *, bw_in: int,
 
 
 def lut_lookup_pallas(codes: jax.Array, indices: jax.Array, table: jax.Array,
-                      bw_in: int, *, block_b: int = 128, block_o: int = 128,
+                      bw_in: int, *, block_b: int = DEFAULT_BLOCK_B,
+                      block_o: int = 128,
                       e_chunk: int = 512,
                       interpret: bool = False) -> jax.Array:
     """(batch, I) codes -> (batch, O) codes through per-neuron truth tables."""

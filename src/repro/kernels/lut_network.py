@@ -83,7 +83,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.lut_lookup import (pack_fan_in_entries,
+from repro.kernels.lut_lookup import (DEFAULT_BLOCK_B, pack_fan_in_entries,
                                       pack_fan_in_entries_mixed)
 
 
@@ -131,7 +131,8 @@ class NetworkSlabs:
                 "total_bytes": idx + tab, "packed_int8": self.packed}
 
 
-def estimate_slab_bytes(layers: Sequence[tuple]) -> tuple[int, bool, bool]:
+def estimate_slab_bytes(layers: Sequence[tuple],
+                        pack: bool | None = None) -> tuple[int, bool, bool]:
     """Projected fused-slab footprint, int8-pack and f32-exact eligibility.
 
     Computed from shapes plus one pass of min/max over the tables (no
@@ -139,18 +140,21 @@ def estimate_slab_bytes(layers: Sequence[tuple]) -> tuple[int, bool, bool]:
     construction it would discard on the per-layer fallback path.  Returns
     ``(bytes, pack, f32_exact)``; ``f32_exact`` is False when any output
     code is outside [0, 2^24), where the kernel's f32 one-hot gather
-    would round.
+    would round.  ``pack`` follows ``build_network_slabs``: None auto-packs
+    when every code fits a byte; an explicit value costs that choice
+    instead (the plan machinery uses this to price pack on/off variants).
     """
     o_sum = sum(np.asarray(t).shape[0] for _, t, _ in layers)
     fi_max = max(np.asarray(i).shape[1] for i, _, _ in layers)
     e_max = max(np.asarray(t).shape[1] for _, t, _ in layers)
     lo_hi = [(int(np.min(t, initial=0)), int(np.max(t, initial=0)))
              for _, t, _ in layers]
-    pack = all(lo >= 0 and hi < 256 for lo, hi in lo_hi)
+    byte_ok = all(lo >= 0 and hi < 256 for lo, hi in lo_hi)
     f32_exact = all(lo >= 0 and hi < 1 << 24 for lo, hi in lo_hi)
-    table_itemsize = 1 if pack else 4
+    use_pack = _resolve_pack(byte_ok, pack)
+    table_itemsize = 1 if use_pack else 4
     return (o_sum * fi_max * 4
-            + o_sum * e_max * table_itemsize), pack, f32_exact
+            + o_sum * e_max * table_itemsize), use_pack, f32_exact
 
 
 def _resolve_pack(byte_ok: bool, pack: bool | None) -> bool:
@@ -281,7 +285,7 @@ def _kernel(codes_ref, idx_ref, table_ref, out_ref, *,
 
 
 def lut_network_pallas(codes: jax.Array, slabs: NetworkSlabs, *,
-                       block_b: int = 128,
+                       block_b: int = DEFAULT_BLOCK_B,
                        interpret: bool = False) -> jax.Array:
     """Whole sparse stack in one kernel: (batch, I0) -> (batch, O_last)."""
     batch, n_in = codes.shape
@@ -387,24 +391,27 @@ def _mixed_lo_hi(layers) -> tuple[int, int]:
     return lo, hi
 
 
-def estimate_mixed_slab_bytes(layers) -> tuple[int, bool, bool]:
+def estimate_mixed_slab_bytes(layers,
+                              pack: bool | None = None
+                              ) -> tuple[int, bool, bool]:
     """Projected mixed-slab footprint, int8-pack and f32-exact eligibility.
 
     ``layers`` is a ``MixedLayerTables`` sequence (``repro.compile``'s
     ``CNet.to_mixed_tables`` lowering).  The table slab costs exactly the
     stack's total table entries (1 or 4 bytes each); the metadata adds
     three (sum O, FI_max) int32 slabs (indices, shifts, widths).  Same
-    contract as ``estimate_slab_bytes``: lets ``ops.fused_plan`` decide
-    before any slab is built.
+    contract as ``estimate_slab_bytes``: lets the plan machinery decide
+    before any slab is built, with ``pack`` forcing the on/off choice
+    (None auto-packs when every code fits a byte).
     """
     o_sum = sum(L.indices.shape[0] for L in layers)
     fi_max = max(L.indices.shape[1] for L in layers)
     entries = sum(L.n_entries for L in layers)
     lo, hi = _mixed_lo_hi(layers)
-    pack = lo >= 0 and hi < 256
+    use_pack = _resolve_pack(lo >= 0 and hi < 256, pack)
     f32_exact = lo >= 0 and hi < 1 << 24
     return (3 * o_sum * fi_max * 4
-            + entries * (1 if pack else 4)), pack, f32_exact
+            + entries * (1 if use_pack else 4)), use_pack, f32_exact
 
 
 def build_mixed_network_slabs(layers, *,
@@ -517,7 +524,7 @@ def _mixed_kernel(codes_ref, idx_ref, shift_ref, width_ref, table_ref,
 
 
 def lut_network_mixed_pallas(codes: jax.Array, slabs: MixedNetworkSlabs, *,
-                             block_b: int = 128,
+                             block_b: int = DEFAULT_BLOCK_B,
                              interpret: bool = False) -> jax.Array:
     """Whole sparse stack, compiler-exact slabs: (batch, I0) -> (batch, O)."""
     batch, n_in = codes.shape

@@ -8,105 +8,30 @@ dtypes against the ref.py oracles either way.
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.lut_lookup import lut_lookup_pallas
-from repro.kernels.lut_network import (estimate_mixed_slab_bytes,
-                                       estimate_slab_bytes)
+from repro.kernels.lut_lookup import DEFAULT_BLOCK_B, lut_lookup_pallas
 from repro.kernels.masked_matmul import masked_matmul_pallas
-
-# Fused-network slab budget: the whole stack's tables + indices must sit in
-# VMEM alongside a batch tile of codes and the per-layer scratch.  ~16 MB
-# per core; keep the slabs under half of it and leave the rest to the
-# compiler (same conservatism as the lut_lookup tile sizing).
-FUSED_VMEM_BUDGET_BYTES = 8 * 2 ** 20
+# the fused-path costing lives in repro.kernels.plan since the
+# ExecutionPlan refactor; re-exported here so long-standing importers
+# (`from repro.kernels.ops import fused_plan`) keep working
+from repro.kernels.plan import (FUSED_VMEM_BUDGET_BYTES,  # noqa: F401
+                                FusedPlan, fused_plan)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@dataclasses.dataclass(frozen=True)
-class FusedPlan:
-    """Why ``lut_network`` will (or won't) take the fused single-kernel path.
-
-    ``reason`` is one of ``"fused"`` (eligible), ``"slab_exceeds_vmem_budget"``
-    or ``"codes_exceed_f32_exact_range"`` — the two fallback causes the
-    kernel enforces — or ``"fused_disabled"`` when the caller explicitly
-    opted out (``fused=False`` / ``use_pallas=False``; the serving
-    engine records the decision that was actually made, not just
-    eligibility).  ``layout`` records which slab layout was costed:
-    ``"uniform"`` for ``(indices, table, bw_in)`` triples, ``"mixed"`` for
-    the compiler's compact ``MixedLayerTables`` lowering (whose table slab
-    holds exactly ``2^(sum of input widths)`` entries per neuron, so
-    stacks that overflow the budget uniformly can still fuse).  The bench
-    records this next to its timings so a regression gate can tell "fused
-    fell back" apart from "fused got slower" (see
-    benchmarks/kernel_bench.py).
-    """
-
-    fused: bool
-    reason: str
-    slab_bytes: int
-    vmem_budget_bytes: int
-    pack: bool
-    f32_exact: bool
-    layout: str = "uniform"
-
-    def as_dict(self) -> dict:
-        # headroom rides along so artifact consumers get the slab-vs-budget
-        # breakdown from the one authoritative record
-        return {**dataclasses.asdict(self),
-                "headroom_bytes": self.vmem_budget_bytes - self.slab_bytes}
-
-
-def fused_plan(layers, vmem_budget_bytes: int = FUSED_VMEM_BUDGET_BYTES
-               ) -> FusedPlan:
-    """Evaluate the fused-path eligibility gate without building slabs.
-
-    The single source of truth for the decision ``lut_network`` makes:
-    projected slab bytes must fit the VMEM budget and every output code
-    must be exact under the kernel's f32 one-hot gathers.  ``layers`` is
-    either the uniform ``(indices, table, bw_in)`` triple list or the
-    compiler's ``MixedLayerTables`` lowering (``CNet.to_mixed_tables``);
-    the latter is costed at its exact compact footprint, which is what
-    lets compiler-shrunk stacks that would overflow the budget uniformly
-    become fused-eligible.
-
-    Example::
-
-        import numpy as np
-        from repro.kernels.ops import fused_plan
-        idx = np.zeros((4, 2), np.int32)            # 4 neurons, fan-in 2
-        tab = np.zeros((4, 16), np.int32)           # bw=2: 2**(2*2) entries
-        plan = fused_plan([(idx, tab, 2)])
-        assert plan.fused and plan.reason == "fused"
-        assert plan.layout == "uniform" and plan.slab_bytes > 0
-    """
-    layers = list(layers)
-    mixed = bool(layers) and hasattr(layers[0], "entry_bits")
-    estimate = estimate_mixed_slab_bytes if mixed else estimate_slab_bytes
-    est_bytes, pack, f32_exact = estimate(layers)
-    if not f32_exact:
-        fused, reason = False, "codes_exceed_f32_exact_range"
-    elif est_bytes > vmem_budget_bytes:
-        fused, reason = False, "slab_exceeds_vmem_budget"
-    else:
-        fused, reason = True, "fused"
-    return FusedPlan(fused, reason, est_bytes, vmem_budget_bytes,
-                     pack, f32_exact, "mixed" if mixed else "uniform")
-
-
 @functools.partial(jax.jit,
                    static_argnames=("bw_in", "use_pallas", "block_b"))
 def lut_lookup(codes: jax.Array, indices: jax.Array, table: jax.Array,
                bw_in: int, use_pallas: bool = True,
-               block_b: int = 128) -> jax.Array:
+               block_b: int = DEFAULT_BLOCK_B) -> jax.Array:
     """LogicNets LUT-layer inference: (B, I) codes -> (B, O) codes.
 
     Jit'd with a shape/static-arg cache: repeated calls on the same layer
@@ -122,7 +47,7 @@ def lut_lookup(codes: jax.Array, indices: jax.Array, table: jax.Array,
 
 
 def lut_network(codes: jax.Array, layers, *, fused: bool = True,
-                use_pallas: bool = True, block_b: int = 128,
+                use_pallas: bool = True, block_b: int = DEFAULT_BLOCK_B,
                 vmem_budget_bytes: int = FUSED_VMEM_BUDGET_BYTES,
                 optimize_level: int | None = None) -> jax.Array:
     """Whole sparse-stack LUT inference: (B, I0) codes -> (B, O_last) codes.

@@ -1,0 +1,220 @@
+"""Execution-plan variants: the enumerable space the engine autotunes over.
+
+The paper prices topologies by worst-case hardware cost before synthesis;
+the software analogue of that choice is which *implementation* of a
+LUT-network stack to run — mixed vs uniform slabs vs the per-layer
+fallback, which batch tile ``block_b``, table slab packed to int8 or kept
+int32.  Historically the engine answered with a static byte estimate
+(``fused_plan``) plus scattered ``block_b=128`` defaults; this module
+makes the space first-class:
+
+* :class:`FusedPlan` — the byte/eligibility costing of one layout (moved
+  here from ``ops.py``; ``ops`` re-exports it unchanged);
+* :class:`PlanVariant` — one point in the variant space: a layout, a
+  ``block_b`` and a pack choice, carrying its :class:`FusedPlan` cost;
+* :func:`enumerate_variants` — every VMEM-eligible variant for a stack,
+  each buildable through the existing slab builders;
+* :func:`default_variant` — the heuristic ladder (mixed if eligible, else
+  uniform if eligible, else per-layer) at :data:`DEFAULT_BLOCK_B`, i.e.
+  exactly what ``engine.compile_network`` picks without autotuning.
+
+``repro.engine.autotune`` times each variant's jitted forward and persists
+the winner in the artifact as an ``ExecutionPlan``; this module stays
+host-side and cheap (shape arithmetic plus one min/max pass per layout —
+no slabs are built here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.kernels.lut_lookup import DEFAULT_BLOCK_B
+from repro.kernels.lut_network import (estimate_mixed_slab_bytes,
+                                       estimate_slab_bytes)
+
+# block_b sweep the autotuner explores by default (the engine adds the
+# caller's requested block_b to this set when it differs)
+DEFAULT_BLOCK_BS = (64, 128, 256)
+
+# Fused-network slab budget: the whole stack's tables + indices must sit in
+# VMEM alongside a batch tile of codes and the per-layer scratch.  ~16 MB
+# per core; keep the slabs under half of it and leave the rest to the
+# compiler (same conservatism as the lut_lookup tile sizing).
+FUSED_VMEM_BUDGET_BYTES = 8 * 2 ** 20
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedPlan:
+    """Why ``lut_network`` will (or won't) take the fused single-kernel path.
+
+    ``reason`` is one of ``"fused"`` (eligible), ``"slab_exceeds_vmem_budget"``
+    or ``"codes_exceed_f32_exact_range"`` — the two fallback causes the
+    kernel enforces — or ``"fused_disabled"`` when the caller explicitly
+    opted out (``fused=False`` / ``use_pallas=False``; the serving
+    engine records the decision that was actually made, not just
+    eligibility).  ``"per_layer_variant"`` marks the autotuner's
+    per-layer candidate enumerated *alongside* eligible fused layouts
+    (fell back by measurement, not by constraint).  ``layout`` records
+    which slab layout was costed: ``"uniform"`` for
+    ``(indices, table, bw_in)`` triples, ``"mixed"`` for the compiler's
+    compact ``MixedLayerTables`` lowering (whose table slab holds exactly
+    ``2^(sum of input widths)`` entries per neuron, so stacks that
+    overflow the budget uniformly can still fuse).  The bench records
+    this next to its timings so a regression gate can tell "fused fell
+    back" apart from "fused got slower" (see benchmarks/kernel_bench.py).
+    """
+
+    fused: bool
+    reason: str
+    slab_bytes: int
+    vmem_budget_bytes: int
+    pack: bool
+    f32_exact: bool
+    layout: str = "uniform"
+
+    def as_dict(self) -> dict:
+        # headroom rides along so artifact consumers get the slab-vs-budget
+        # breakdown from the one authoritative record
+        return {**dataclasses.asdict(self),
+                "headroom_bytes": self.vmem_budget_bytes - self.slab_bytes}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FusedPlan":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
+
+def fused_plan(layers, vmem_budget_bytes: int = FUSED_VMEM_BUDGET_BYTES,
+               *, pack: bool | None = None) -> FusedPlan:
+    """Evaluate the fused-path eligibility gate without building slabs.
+
+    The single source of truth for the decision ``lut_network`` makes:
+    projected slab bytes must fit the VMEM budget and every output code
+    must be exact under the kernel's f32 one-hot gathers.  ``layers`` is
+    either the uniform ``(indices, table, bw_in)`` triple list or the
+    compiler's ``MixedLayerTables`` lowering (``CNet.to_mixed_tables``);
+    the latter is costed at its exact compact footprint, which is what
+    lets compiler-shrunk stacks that would overflow the budget uniformly
+    become fused-eligible.  ``pack`` forces the int8 table-slab choice
+    when given (None auto-packs) — :func:`enumerate_variants` uses this
+    to price pack on/off as separate variants.
+
+    Example::
+
+        import numpy as np
+        from repro.kernels.ops import fused_plan
+        idx = np.zeros((4, 2), np.int32)            # 4 neurons, fan-in 2
+        tab = np.zeros((4, 16), np.int32)           # bw=2: 2**(2*2) entries
+        plan = fused_plan([(idx, tab, 2)])
+        assert plan.fused and plan.reason == "fused"
+        assert plan.layout == "uniform" and plan.slab_bytes > 0
+    """
+    layers = list(layers)
+    mixed = bool(layers) and hasattr(layers[0], "entry_bits")
+    estimate = estimate_mixed_slab_bytes if mixed else estimate_slab_bytes
+    est_bytes, use_pack, f32_exact = estimate(layers, pack)
+    if not f32_exact:
+        fused, reason = False, "codes_exceed_f32_exact_range"
+    elif est_bytes > vmem_budget_bytes:
+        fused, reason = False, "slab_exceeds_vmem_budget"
+    else:
+        fused, reason = True, "fused"
+    return FusedPlan(fused, reason, est_bytes, vmem_budget_bytes,
+                     use_pack, f32_exact, "mixed" if mixed else "uniform")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanVariant:
+    """One point in the execution-strategy space: layout x block_b x pack.
+
+    ``layout`` is ``"mixed"``, ``"uniform"`` or ``"per_layer"`` (the
+    engine additionally uses ``"reference"`` for its jnp oracle path —
+    never enumerated here).  ``cost`` is the variant's byte/eligibility
+    record; for ``per_layer`` it carries the uniform costing with
+    ``fused=False`` so the fallback's *reason* survives in the artifact.
+    ``key`` is the stable human-readable identity the autotuner's timing
+    table and the bench are keyed on, e.g. ``"mixed/b128/packed"``.
+    """
+
+    layout: str
+    block_b: int
+    pack: bool
+    cost: FusedPlan
+
+    @property
+    def key(self) -> str:
+        return (f"{self.layout}/b{self.block_b}/"
+                f"{'packed' if self.pack else 'unpacked'}")
+
+    def as_dict(self) -> dict:
+        return {"layout": self.layout, "block_b": self.block_b,
+                "pack": self.pack, "cost": self.cost.as_dict()}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PlanVariant":
+        return cls(layout=str(d["layout"]), block_b=int(d["block_b"]),
+                   pack=bool(d["pack"]),
+                   cost=FusedPlan.from_dict(d["cost"]))
+
+
+def enumerate_variants(uniform_triples=None, mixed_tables=None, *,
+                       block_bs=DEFAULT_BLOCK_BS,
+                       vmem_budget_bytes: int = FUSED_VMEM_BUDGET_BYTES,
+                       include_per_layer: bool = True
+                       ) -> tuple[PlanVariant, ...]:
+    """Every buildable variant for a stack, in deterministic order.
+
+    For each available layout (``mixed_tables`` when the compiler lowering
+    exists, ``uniform_triples`` always) the auto-pack costing is computed
+    once; pack=False is additionally enumerated when auto-pack chose int8
+    (the unpacked slab trades VMEM for skipping the in-kernel widen), and
+    each eligible (layout, pack) is crossed with every ``block_bs`` tile.
+    Ineligible fused combinations (budget / f32-exactness) are dropped;
+    the per-layer fallback is always enumerable and closes the space, so
+    the result is non-empty whenever ``uniform_triples`` is given.
+    """
+    variants: list[PlanVariant] = []
+    pools = []
+    if mixed_tables is not None:
+        pools.append(list(mixed_tables))
+    if uniform_triples is not None:
+        pools.append(list(uniform_triples))
+    for layers in pools:
+        auto = fused_plan(layers, vmem_budget_bytes)
+        packs = [auto.pack] + ([False] if auto.pack else [])
+        for p in packs:
+            plan = (auto if p == auto.pack
+                    else fused_plan(layers, vmem_budget_bytes, pack=p))
+            if not plan.fused:
+                continue
+            for bb in block_bs:
+                variants.append(PlanVariant(plan.layout, int(bb), p, plan))
+    if include_per_layer and uniform_triples is not None:
+        base = fused_plan(list(uniform_triples), vmem_budget_bytes)
+        cost = dataclasses.replace(
+            base, fused=False,
+            reason=base.reason if not base.fused else "per_layer_variant")
+        for bb in block_bs:
+            variants.append(PlanVariant("per_layer", int(bb), False, cost))
+    return tuple(variants)
+
+
+def default_variant(uniform_triples=None, mixed_tables=None, *,
+                    block_b: int = DEFAULT_BLOCK_B,
+                    vmem_budget_bytes: int = FUSED_VMEM_BUDGET_BYTES
+                    ) -> PlanVariant:
+    """The heuristic choice ``engine.compile_network`` makes without
+    autotuning: mixed if eligible, else uniform if eligible, else the
+    per-layer fallback — at the requested ``block_b`` with auto pack."""
+    if mixed_tables is not None:
+        plan = fused_plan(list(mixed_tables), vmem_budget_bytes)
+        if plan.fused:
+            return PlanVariant("mixed", int(block_b), plan.pack, plan)
+    if uniform_triples is None:
+        raise ValueError("default_variant needs uniform_triples when the "
+                         "mixed lowering is absent or ineligible")
+    plan = fused_plan(list(uniform_triples), vmem_budget_bytes)
+    if plan.fused:
+        return PlanVariant("uniform", int(block_b), plan.pack, plan)
+    return PlanVariant("per_layer", int(block_b), False,
+                       dataclasses.replace(plan, fused=False))

@@ -111,10 +111,19 @@ def _lut_artifact(args: argparse.Namespace):
     tables = LN.generate_tables(cfg, model)
     net = engine.compile_network(tables, optimize_level=args.optimize_level,
                                  in_features=cfg.in_features,
-                                 block_b=args.block_b)
+                                 block_b=args.block_b,
+                                 autotune=args.autotune)
     print(f"[serve --lut] compiled generated fpga4hep model A at level "
           f"{args.optimize_level}: layout={net.layout}, table slab "
           f"{net.vmem_breakdown()['table_slab_bytes']} B")
+    if args.autotune:
+        plan = net.plan
+        us = plan.timings_us
+        default_us = us.get(plan.default_key)
+        print(f"[serve --lut] autotuned over {len(us)} variants: chose "
+              f"{plan.variant.key} ({us[plan.variant.key]:.0f} us/call vs "
+              f"heuristic {plan.default_key} at {default_us:.0f} us); "
+              f"save the artifact to replay this plan with zero search")
     return net, cfg.bw
 
 
@@ -279,6 +288,10 @@ def main() -> None:
                     help="truth-table compiler level when compiling")
     ap.add_argument("--block-b", type=int, default=16,
                     help="engine batch bucket (jit block size)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="when compiling, time every eligible plan variant "
+                    "(layout x block_b x pack) and serve the measured "
+                    "winner; the tier then buckets on the plan's block_b")
     ap.add_argument("--clients", type=int, default=8,
                     help="closed-loop concurrent clients")
     ap.add_argument("--requests-per-client", type=int, default=16)

@@ -16,9 +16,9 @@ docs/serving.md and docs/ingress.md for the lifecycle and knobs,
 bench's ``serving_tier`` / ``ingress`` sections for the gated numbers.
 """
 
-from repro.serve.ingress import (BackgroundIngress, HttpIngress,
-                                 IngressConfig, QuotaConfig, QuotaExceeded,
-                                 TokenBucket, http_infer)
+from repro.serve.ingress import (BackgroundIngress, HttpClientPool,
+                                 HttpIngress, IngressConfig, QuotaConfig,
+                                 QuotaExceeded, TokenBucket, http_infer)
 from repro.serve.loadgen import (LoadReport, make_requests,
                                  poisson_arrivals, run_closed_loop,
                                  run_open_loop)
@@ -26,9 +26,9 @@ from repro.serve.tier import (RequestTimeout, ServingTier, TierClosed,
                               TierConfig, TierError, TierOverloaded,
                               run_requests, serve_once)
 
-__all__ = ["BackgroundIngress", "HttpIngress", "IngressConfig",
-           "LoadReport", "QuotaConfig", "QuotaExceeded", "RequestTimeout",
-           "ServingTier", "TierClosed", "TierConfig", "TierError",
-           "TierOverloaded", "TokenBucket", "http_infer", "make_requests",
-           "poisson_arrivals", "run_closed_loop", "run_open_loop",
-           "run_requests", "serve_once"]
+__all__ = ["BackgroundIngress", "HttpClientPool", "HttpIngress",
+           "IngressConfig", "LoadReport", "QuotaConfig", "QuotaExceeded",
+           "RequestTimeout", "ServingTier", "TierClosed", "TierConfig",
+           "TierError", "TierOverloaded", "TokenBucket", "http_infer",
+           "make_requests", "poisson_arrivals", "run_closed_loop",
+           "run_open_loop", "run_requests", "serve_once"]

@@ -422,19 +422,11 @@ def _err(error: str, detail: str) -> dict:
 # Async HTTP client (the open-loop load generator's and tests' counterpart)
 # ---------------------------------------------------------------------------
 
-async def http_infer(host: str, port: int, codes: np.ndarray, *,
-                     tenant: str | None = None, raw: bool = True,
-                     timeout_s: float = 60.0) -> np.ndarray:
-    """One ``POST /v1/infer`` round trip; raises the tier's typed errors.
-
-    The inverse of the server's status mapping: 429 ->
-    :class:`QuotaExceeded`, 503 -> :class:`TierOverloaded` (or
-    :class:`TierClosed` when the body says ``draining``), 408 ->
-    :class:`RequestTimeout`, anything else non-200 -> :class:`TierError`.
-    ``raw`` uses the int8 octet-stream encoding (the cheap path);
-    ``raw=False`` posts JSON.
-    """
-    codes = np.asarray(codes, dtype=np.int32)
+def _encode_infer_request(host: str, port: int, codes: np.ndarray, *,
+                          tenant: str | None, raw: bool,
+                          close: bool) -> bytes:
+    """Wire bytes of one ``POST /v1/infer`` (shared by the one-shot client
+    and the keep-alive pool; ``close`` controls ``connection: close``)."""
     if raw:
         body = codes.astype(np.int8).tobytes()
         ctype = "application/octet-stream"
@@ -442,29 +434,28 @@ async def http_infer(host: str, port: int, codes: np.ndarray, *,
         body = json.dumps({"codes": codes.tolist()}).encode()
         ctype = "application/json"
     headers = ["POST /v1/infer HTTP/1.1", f"host: {host}:{port}",
-               f"content-type: {ctype}", f"content-length: {len(body)}",
-               "connection: close"]
+               f"content-type: {ctype}", f"content-length: {len(body)}"]
+    if close:
+        headers.append("connection: close")
     if tenant is not None:
         headers.append(f"x-tenant: {tenant}")
-    reader, writer = await asyncio.open_connection(host, port)
-    try:
-        writer.write(("\r\n".join(headers) + "\r\n\r\n").encode() + body)
-        await writer.drain()
-        status, resp_headers, resp_body = await asyncio.wait_for(
-            _read_response(reader), timeout_s)
-    finally:
-        writer.close()
-        try:
-            await writer.wait_closed()
-        except ConnectionError:                    # pragma: no cover
-            pass
+    return ("\r\n".join(headers) + "\r\n\r\n").encode() + body
+
+
+def _decode_infer_response(status: int, headers: dict, body: bytes,
+                           rows: int) -> np.ndarray:
+    """The inverse of the server's status mapping: 429 ->
+    :class:`QuotaExceeded`, 503 -> :class:`TierOverloaded` (or
+    :class:`TierClosed` when the body says ``draining``), 408 ->
+    :class:`RequestTimeout`, anything else non-200 -> :class:`TierError`.
+    """
     if status == 200:
-        if resp_headers.get("content-type", "").startswith(
+        if headers.get("content-type", "").startswith(
                 "application/octet-stream"):
-            return np.frombuffer(resp_body, np.int8) \
-                .reshape(codes.shape[0], -1).astype(np.int32)
-        return np.asarray(json.loads(resp_body)["outputs"], np.int32)
-    detail = _error_detail(resp_body)
+            return np.frombuffer(body, np.int8) \
+                .reshape(rows, -1).astype(np.int32)
+        return np.asarray(json.loads(body)["outputs"], np.int32)
+    detail = _error_detail(body)
     if status == 429:
         raise QuotaExceeded(detail)
     if status == 408:
@@ -474,6 +465,125 @@ async def http_infer(host: str, port: int, codes: np.ndarray, *,
             raise TierClosed(detail)
         raise TierOverloaded(detail)
     raise TierError(f"HTTP {status}: {detail}")
+
+
+async def _close_connection(conn) -> None:
+    _, writer = conn
+    writer.close()
+    try:
+        await writer.wait_closed()
+    except ConnectionError:                        # pragma: no cover
+        pass
+
+
+async def http_infer(host: str, port: int, codes: np.ndarray, *,
+                     tenant: str | None = None, raw: bool = True,
+                     timeout_s: float = 60.0) -> np.ndarray:
+    """One ``POST /v1/infer`` round trip; raises the tier's typed errors.
+
+    Opens (and closes) a fresh connection per call — fine for tests and
+    one-shots; a load generator should use :class:`HttpClientPool`, which
+    reuses keep-alive connections and so measures server behavior rather
+    than connection-setup cost.  ``raw`` uses the int8 octet-stream
+    encoding (the cheap path); ``raw=False`` posts JSON.
+    """
+    codes = np.asarray(codes, dtype=np.int32)
+    payload = _encode_infer_request(host, port, codes, tenant=tenant,
+                                    raw=raw, close=True)
+    conn = await asyncio.open_connection(host, port)
+    reader, writer = conn
+    try:
+        writer.write(payload)
+        await writer.drain()
+        status, resp_headers, resp_body = await asyncio.wait_for(
+            _read_response(reader), timeout_s)
+    finally:
+        await _close_connection(conn)
+    return _decode_infer_response(status, resp_headers, resp_body,
+                                  codes.shape[0])
+
+
+class HttpClientPool:
+    """Keep-alive ``POST /v1/infer`` client over a bounded connection pool.
+
+    The load generator's counterpart to the server's persistent
+    connections: up to ``size`` concurrent requests each hold one pooled
+    connection (opened lazily, reused across requests), so an open-loop
+    sweep exercises the *server's* admission path instead of paying — and
+    measuring — a TCP handshake per request (which flattered rejection
+    latency under overload; see docs/ingress.md).
+
+    A request that finds its reused connection dead (the server dropped a
+    stale keep-alive) retries once on a fresh connection; server-level
+    errors map to the same typed exceptions as :func:`http_infer`.
+    ``close()`` drains the pool — call it only after in-flight requests
+    finished (the loadgen awaits its workers first).
+    """
+
+    def __init__(self, host: str, port: int, *, size: int = 8,
+                 tenant: str | None = None, raw: bool = True,
+                 timeout_s: float = 60.0):
+        self._host, self._port = host, int(port)
+        self._tenant, self._raw = tenant, raw
+        self._timeout_s = timeout_s
+        # each slot is either a live (reader, writer) pair or None (open
+        # lazily on first use); the bounded queue is the concurrency gate
+        self._slots: asyncio.Queue = asyncio.Queue()
+        for _ in range(max(1, int(size))):
+            self._slots.put_nowait(None)
+        self._closed = False
+
+    async def infer(self, codes: np.ndarray, *,
+                    tenant: str | None = None) -> np.ndarray:
+        """One inference round trip on a pooled keep-alive connection."""
+        if self._closed:
+            raise RuntimeError("HttpClientPool is closed")
+        codes = np.asarray(codes, dtype=np.int32)
+        tenant = self._tenant if tenant is None else tenant
+        payload = _encode_infer_request(self._host, self._port, codes,
+                                        tenant=tenant, raw=self._raw,
+                                        close=False)
+        conn = await self._slots.get()
+        reused = conn is not None
+        try:
+            while True:
+                if conn is None:
+                    conn = await asyncio.open_connection(self._host,
+                                                         self._port)
+                reader, writer = conn
+                try:
+                    writer.write(payload)
+                    await writer.drain()
+                    status, headers, body = await asyncio.wait_for(
+                        _read_response(reader), self._timeout_s)
+                except asyncio.TimeoutError:
+                    # connection state unknown mid-response: never reuse
+                    await _close_connection(conn)
+                    conn = None
+                    raise
+                except (ConnectionError, asyncio.IncompleteReadError):
+                    await _close_connection(conn)
+                    conn = None
+                    if reused:
+                        # stale keep-alive connection — one fresh retry
+                        reused = False
+                        continue
+                    raise
+                if headers.get("connection", "").lower() == "close":
+                    await _close_connection(conn)
+                    conn = None
+                return _decode_infer_response(status, headers, body,
+                                              codes.shape[0])
+        finally:
+            self._slots.put_nowait(conn)
+
+    async def close(self) -> None:
+        """Close every idle pooled connection and refuse further infers."""
+        self._closed = True
+        while not self._slots.empty():
+            conn = self._slots.get_nowait()
+            if conn is not None:
+                await _close_connection(conn)
 
 
 async def _read_response(reader):

@@ -203,7 +203,12 @@ class ServingTier:
         cfg = config or TierConfig()
         self._net = net
         self._cfg = cfg
-        self._max_batch = cfg.max_batch_rows or net.block_b
+        # the artifact's ExecutionPlan is the source of truth for the batch
+        # tile (an autotuned artifact may have picked a non-default
+        # block_b); net.block_b is the fallback for plan-less stand-ins
+        block_b = getattr(getattr(net, "plan", None), "block_b", None) \
+            or net.block_b
+        self._max_batch = cfg.max_batch_rows or block_b
         if self._max_batch <= 0:
             raise ValueError("max_batch_rows must be positive")
         devices = tuple(cfg.devices) if cfg.devices else tuple(jax.devices())
@@ -211,7 +216,7 @@ class ServingTier:
         # batches are padded to a multiple of this unit: block_b keeps the
         # engine on its one-trace-per-bucket contract, len(devices) keeps
         # the shard_map batch axis evenly divisible
-        self._bucket_unit = math.lcm(net.block_b, len(devices))
+        self._bucket_unit = math.lcm(block_b, len(devices))
         self._forward, self._sharded_jit = self._make_forward()
         self._pending: collections.deque[_Request] = collections.deque()
         self._queued_rows = 0

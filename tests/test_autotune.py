@@ -1,0 +1,256 @@
+"""Compile-time variant autotuner: ``repro.kernels.plan`` + ``engine``.
+
+Four contracts under test:
+
+* **enumeration** — ``enumerate_variants`` produces the deterministic
+  layout x block_b x pack space (fused-ineligible layouts skipped, the
+  per-layer escape hatch always present), and ``default_variant``
+  reproduces the heuristic ladder ``compile_network`` used before the
+  autotuner existed;
+* **selection** — ``compile_network(autotune=True)`` stays bit-exact
+  against the reference, carries a full per-variant timing table, and
+  picks the measured minimum (so it is never slower than the heuristic
+  default *on the table it measured*);
+* **persistence** — the :class:`ExecutionPlan` (winner, source, timing
+  table, default key) round-trips through ``save``/``load`` with zero
+  re-search and zero compiler runs at load;
+* **compat** — a format-1 artifact (bare ``FusedPlan`` record, no
+  variant) still loads bit-exact with a synthesized default plan, and a
+  format newer than this build is rejected.
+"""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core.table_infer import network_table_forward
+from repro.core.truth_table import LayerTruthTable
+from repro.engine.autotune import ExecutionPlan, autotune_network
+from repro.kernels import (DEFAULT_BLOCK_B, FusedPlan, default_variant,
+                           enumerate_variants, fused_plan)
+
+
+def _random_stack(widths, fan_ins, bws, seed=0):
+    rng = np.random.default_rng(seed)
+    layers = []
+    for (n_in, n_out), fi, bw in zip(zip(widths[:-1], widths[1:]),
+                                     fan_ins, bws):
+        fi = min(fi, n_in)
+        idx = np.stack([np.sort(rng.choice(n_in, fi, replace=False))
+                        for _ in range(n_out)]).astype(np.int32)
+        tab = rng.integers(0, 2 ** bw, (n_out, 2 ** (fi * bw)),
+                           dtype=np.int32)
+        layers.append((idx, tab, bw))
+    return layers
+
+
+def _tables(layers):
+    return [LayerTruthTable(tab, idx, bw, bw) for idx, tab, bw in layers]
+
+
+def _codes(n_in, bw, batch, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).integers(
+        0, 2 ** bw, (batch, n_in), dtype=np.int32))
+
+
+STACK = ((12, 20, 16, 8), (3, 3, 3), (2, 2, 2))
+
+
+# ---------------------------------------------------------------------------
+# enumeration
+# ---------------------------------------------------------------------------
+
+
+def test_enumerate_variants_space_and_keys():
+    layers = _random_stack(*STACK, seed=13)
+    variants = enumerate_variants(uniform_triples=layers,
+                                  block_bs=(16, 32))
+    keys = [v.key for v in variants]
+    assert len(keys) == len(set(keys)), "variant keys must be unique"
+    layouts = {v.layout for v in variants}
+    # no mixed tables were passed, so no mixed variants; the per-layer
+    # escape hatch is always enumerable
+    assert layouts == {"uniform", "per_layer"}
+    assert {v.block_b for v in variants} == {16, 32}
+    # every fused variant carries a fused costing; per_layer never does
+    for v in variants:
+        assert v.cost.fused == (v.layout != "per_layer")
+        if v.layout == "per_layer" and fused_plan(layers).fused:
+            assert v.cost.reason == "per_layer_variant"
+    # a packed-eligible stack also enumerates the unpacked fallback
+    auto = fused_plan(layers)
+    if auto.pack:
+        packs = {v.pack for v in variants if v.layout == "uniform"}
+        assert packs == {True, False}
+
+
+def test_enumerate_variants_skips_over_budget_layouts():
+    layers = _random_stack(*STACK, seed=13)
+    variants = enumerate_variants(uniform_triples=layers,
+                                  block_bs=(16,), vmem_budget_bytes=64)
+    # nothing fits in 64 B of VMEM: only the per-layer fallback remains
+    assert {v.layout for v in variants} == {"per_layer"}
+    assert variants[0].cost.reason == "slab_exceeds_vmem_budget"
+
+
+def test_default_variant_matches_heuristic_ladder():
+    layers = _random_stack(*STACK, seed=13)
+    # fused-eligible: the ladder lands on uniform with the auto pack
+    v = default_variant(uniform_triples=layers, block_b=32)
+    assert v.layout == "uniform" and v.block_b == 32
+    assert v.cost == fused_plan(layers)
+    # over budget: the ladder falls back to per_layer, unpacked
+    v64 = default_variant(uniform_triples=layers, vmem_budget_bytes=64)
+    assert v64.layout == "per_layer" and v64.pack is False
+    assert v64.block_b == DEFAULT_BLOCK_B
+    # the heuristic compile path must agree with the ladder
+    eng = engine.compile_network(layers, in_features=STACK[0][0],
+                                 block_b=32)
+    assert eng.plan.source == "heuristic"
+    assert eng.plan.variant == v
+
+
+# ---------------------------------------------------------------------------
+# selection
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_bit_exact_and_picks_measured_minimum():
+    widths, fan_ins, bws = STACK
+    layers = _random_stack(widths, fan_ins, bws, seed=21)
+    codes = _codes(widths[0], bws[0], 17, seed=1)
+    want = np.asarray(network_table_forward(_tables(layers), codes))
+
+    runs0 = engine.compile_runs()
+    eng = engine.compile_network(layers, optimize_level=3,
+                                 in_features=widths[0], autotune=True,
+                                 block_b=16, autotune_block_bs=(8, 16))
+    np.testing.assert_array_equal(np.asarray(eng(codes)), want)
+    plan = eng.plan
+    assert plan.source == "autotune"
+    assert plan.variant.key in plan.timings_us
+    assert plan.default_key in plan.timings_us
+    # winner is the measured minimum, so in particular it is no slower
+    # than the heuristic default on the same timing table
+    best = min(plan.timings_us, key=plan.timings_us.get)
+    assert plan.variant.key == best
+    assert (plan.timings_us[plan.default_key]
+            >= plan.timings_us[plan.variant.key])
+    # the artifact serves at the winner's batch tile
+    assert eng.block_b == plan.block_b
+    # the search timed the jitted forwards, never the truth-table
+    # compiler (one run for optimize_level=3 itself, none for the sweep)
+    assert engine.compile_runs() == runs0 + 1
+
+
+def test_autotune_network_times_every_variant():
+    layers = _random_stack(*STACK, seed=17)
+    plan, built = autotune_network(layers, in_features=STACK[0][0],
+                                   block_b=16, block_bs=(8, 16))
+    want_keys = {v.key for v in enumerate_variants(
+        uniform_triples=layers, block_bs=(8, 16))}
+    assert set(plan.timings_us) == want_keys
+    assert all(t > 0 for t in plan.timings_us.values())
+    assert plan.batch == 16              # max of the sweep
+    assert built is not None
+
+
+def test_autotune_ignored_off_the_pallas_fused_path():
+    layers = _random_stack(*STACK, seed=17)
+    eng = engine.compile_network(layers, in_features=STACK[0][0],
+                                 fused=False, autotune=True)
+    assert eng.plan.source == "heuristic" and eng.layout == "per_layer"
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+
+def test_autotuned_plan_round_trips_with_zero_search(tmp_path):
+    widths, fan_ins, bws = STACK
+    layers = _random_stack(widths, fan_ins, bws, seed=23)
+    codes = _codes(widths[0], bws[0], 19, seed=2)
+    eng = engine.compile_network(layers, in_features=widths[0],
+                                 autotune=True, block_b=16,
+                                 autotune_block_bs=(8, 16))
+    live = np.asarray(eng(codes))
+
+    path = os.path.join(tmp_path, "tuned.npz")
+    eng.save(path)
+    runs0 = engine.compile_runs()
+    eng2 = engine.load(path)
+    # load replays the persisted decision: no compiler run, no timing
+    # sweep — the plan object (winner, source, table) is equal, not
+    # re-derived
+    assert engine.compile_runs() == runs0
+    assert eng2.plan == eng.plan
+    assert eng2.plan.source == "autotune"
+    assert eng2.plan.timings_us == eng.plan.timings_us
+    assert eng2.block_b == eng.plan.block_b
+    np.testing.assert_array_equal(np.asarray(eng2(codes)), live)
+
+
+# ---------------------------------------------------------------------------
+# compat
+# ---------------------------------------------------------------------------
+
+
+def test_format1_artifact_loads_with_synthesized_plan(tmp_path):
+    """A pre-autotune artifact (format 1: the plan record is a bare
+    FusedPlan dict) must load bit-exact, with the default plan
+    synthesized around the stored costing."""
+    from repro.checkpoint.ckpt import load_arrays, save_arrays
+
+    widths, fan_ins, bws = STACK
+    layers = _random_stack(widths, fan_ins, bws, seed=31)
+    codes = _codes(widths[0], bws[0], 15, seed=3)
+    eng = engine.compile_network(layers, in_features=widths[0])
+    live = np.asarray(eng(codes))
+
+    path = os.path.join(tmp_path, "v1.npz")
+    eng.save(path)
+    arrays, meta = load_arrays(path)
+    meta["format"] = 1
+    meta["plan"] = eng.plan.variant.cost.as_dict()   # the old record
+    save_arrays(path, arrays, meta)
+
+    eng2 = engine.load(path)
+    assert eng2.plan.source == "synthesized"
+    assert isinstance(eng2.plan, ExecutionPlan)
+    assert eng2.plan.timings_us == {}               # nothing was timed
+    # the synthesized plan reconstructs the original decision exactly
+    assert eng2.plan.variant.cost == FusedPlan.from_dict(meta["plan"])
+    assert (eng2.plan.layout, eng2.plan.block_b) == (
+        eng.layout, eng.block_b)
+    np.testing.assert_array_equal(np.asarray(eng2(codes)), live)
+
+
+def test_load_rejects_newer_format(tmp_path):
+    from repro.checkpoint.ckpt import load_arrays, save_arrays
+
+    layers = _random_stack((8, 6, 4), (2, 2), (2, 2), seed=9)
+    eng = engine.compile_network(layers, in_features=8)
+    path = os.path.join(tmp_path, "future.npz")
+    eng.save(path)
+    arrays, meta = load_arrays(path)
+    meta["format"] = engine.engine.FORMAT_VERSION + 1
+    save_arrays(path, arrays, meta)
+    with pytest.raises(ValueError, match="format"):
+        engine.load(path)
+
+
+def test_execution_plan_compat_surface():
+    """The ExecutionPlan exposes the fields callers read off the old bare
+    FusedPlan (layout/block_b/pack + costing passthrough)."""
+    layers = _random_stack((8, 6, 4), (2, 2), (2, 2), seed=9)
+    cost = fused_plan(layers)
+    plan = ExecutionPlan.from_fused(cost, "uniform", 32)
+    assert (plan.layout, plan.block_b, plan.pack) == (
+        "uniform", 32, cost.pack)
+    assert plan.fused is cost.fused and plan.reason == cost.reason
+    assert plan.slab_bytes == cost.slab_bytes
+    assert ExecutionPlan.from_dict(plan.as_dict()) == plan

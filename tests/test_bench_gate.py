@@ -28,7 +28,8 @@ def _payload(speedup=2.5, l2_pct=17.2, l2_bytes=53912, l3_pct=17.2,
              serving_speedup=50.0, tier_retraces=0, tier_compiler_runs=0,
              tier_qps=1000.0, tier_p99_ms=8.0, tier_occupancy=0.75,
              tier_obs=None, ing_retraces=0, ing_compiler_runs=0,
-             ing_goodput_ratio=0.3, ing_rejection_rate=0.5):
+             ing_goodput_ratio=0.3, ing_rejection_rate=0.5,
+             at_compiler_runs=0, at_n_variants=10, at_speedup=1.0):
     """Bench-JSON shape with only the gated quantities filled in."""
     if tier_obs is None:
         tier_obs = {"compiler_runs_delta": 0, "memo_hits_delta": 0,
@@ -67,6 +68,11 @@ def _payload(speedup=2.5, l2_pct=17.2, l2_bytes=53912, l3_pct=17.2,
             "compiler_runs_after_warmup": ing_compiler_runs,
             "overload_goodput_ratio": ing_goodput_ratio,
             "overload_rejection_rate": ing_rejection_rate,
+        },
+        "autotune": {
+            "compiler_runs_after_warmup": at_compiler_runs,
+            "n_variants": at_n_variants,
+            "speedup_vs_default": at_speedup,
         },
     }
 
@@ -272,6 +278,39 @@ def test_gate_tolerates_pre_ingress_baseline():
     assert check_against_baseline(_payload(), baseline) == []
 
 
+def test_gate_fails_on_autotune_compiler_run_or_variant_loss():
+    # the variant search must reuse the already-compiled result (sharp
+    # equality), and the enumerated space is deterministic for a fixed
+    # sweep — a shrunken count means eligible variants went missing
+    baseline = baseline_from_payload(_payload())
+    failures = check_against_baseline(_payload(at_compiler_runs=1),
+                                      baseline)
+    assert any("autotune compiler_runs_after_warmup" in f
+               for f in failures), failures
+    failures = check_against_baseline(_payload(at_n_variants=6), baseline)
+    assert any("autotune n_variants" in f for f in failures), failures
+
+
+def test_gate_autotune_selection_collapse_only():
+    # speedup_vs_default is >= 1.0 by construction (the search minimizes
+    # over a set containing the default); noise above the baseline
+    # passes, a collapse below the wide floor trips
+    baseline = baseline_from_payload(_payload(at_speedup=1.0))
+    assert check_against_baseline(_payload(at_speedup=1.4), baseline) == []
+    assert check_against_baseline(_payload(at_speedup=0.8), baseline) == []
+    failures = check_against_baseline(_payload(at_speedup=0.3), baseline)
+    assert any("autotune speedup_vs_default" in f
+               for f in failures), failures
+
+
+def test_gate_tolerates_pre_autotune_baseline():
+    # a baseline recorded before the autotune section existed must not
+    # fail the gate on the new quantities
+    baseline = baseline_from_payload(_payload())
+    del baseline["autotune"]
+    assert check_against_baseline(_payload(), baseline) == []
+
+
 def test_gate_refuses_protocol_mismatch():
     # a full-mode or TPU run is not comparable with the smoke/cpu baseline
     baseline = baseline_from_payload(_payload())
@@ -369,6 +408,13 @@ def test_committed_baseline_is_well_formed():
     assert ing["compiler_runs_after_warmup"] == 0
     assert 0.0 < ing["overload_goodput_ratio"] <= 1.0
     assert 0.0 < ing["overload_rejection_rate"] < 1.0
+    # the autotune section: zero compiler runs during the search, a
+    # deterministic variant count, and a selection no slower than the
+    # heuristic default (>= 1.0 by construction)
+    at = baseline["autotune"]
+    assert at["compiler_runs_after_warmup"] == 0
+    assert at["n_variants"] > 1
+    assert at["speedup_vs_default"] >= 1.0
     # a run reproducing exactly the baseline numbers passes the gate
     payload = _payload(
         speedup=baseline["fused_speedup"],
@@ -390,5 +436,90 @@ def test_committed_baseline_is_well_formed():
         ing_retraces=ing["retraces_after_warmup"],
         ing_compiler_runs=ing["compiler_runs_after_warmup"],
         ing_goodput_ratio=ing["overload_goodput_ratio"],
-        ing_rejection_rate=ing["overload_rejection_rate"])
+        ing_rejection_rate=ing["overload_rejection_rate"],
+        at_compiler_runs=at["compiler_runs_after_warmup"],
+        at_n_variants=at["n_variants"],
+        at_speedup=at["speedup_vs_default"])
     assert check_against_baseline(payload, baseline) == []
+
+
+# ---------------------------------------------------------------------------
+# tools/promote_baseline.py: the reviewable baseline-refresh path
+# ---------------------------------------------------------------------------
+
+
+def test_promote_diff_classifies_sharp_vs_wide():
+    from tools.promote_baseline import diff_baselines
+
+    committed = baseline_from_payload(_payload())
+    candidate = baseline_from_payload(
+        _payload(speedup=3.0,            # wide: timing ratio
+                 compiler_runs=1,        # sharp: compile-once counter
+                 at_n_variants=12))      # sharp: variant count
+    rows = {r["path"]: r for r in diff_baselines(committed, candidate)}
+    assert rows["fused_speedup"]["sharp"] is False
+    assert rows["serving.compiler_runs_after_warmup"]["sharp"] is True
+    assert rows["autotune.n_variants"]["sharp"] is True
+    # obs counters are sharp wholesale
+    committed["serving_tier"]["obs"]["memo_hits_delta"] = 5
+    rows = {r["path"]: r
+            for r in diff_baselines(committed,
+                                    baseline_from_payload(_payload()))}
+    assert rows["serving_tier.obs.memo_hits_delta"]["sharp"] is True
+    # added/removed keys are always sharp (the gate's shape changed)
+    del committed["autotune"]
+    rows = diff_baselines(committed, baseline_from_payload(_payload()))
+    assert all(r["sharp"] for r in rows if r["kind"] == "added")
+    # identical baselines diff empty
+    same = baseline_from_payload(_payload())
+    assert diff_baselines(same, json.loads(json.dumps(same))) == []
+
+
+def test_promote_refuses_sharp_changes_without_allow(tmp_path):
+    from tools.promote_baseline import main as promote
+
+    committed = tmp_path / "baseline.json"
+    committed.write_text(json.dumps(baseline_from_payload(_payload())))
+    bad = tmp_path / "payload.json"
+    bad.write_text(json.dumps(_payload(at_compiler_runs=1)))
+    assert promote([str(bad), "--baseline", str(committed),
+                    "--write"]) == 1
+    # refused: the committed file is untouched
+    assert (json.loads(committed.read_text())["autotune"]
+            ["compiler_runs_after_warmup"]) == 0
+    # --allow overrides after review
+    assert promote([str(bad), "--baseline", str(committed), "--write",
+                    "--allow"]) == 0
+    assert (json.loads(committed.read_text())["autotune"]
+            ["compiler_runs_after_warmup"]) == 1
+
+
+def test_promote_wide_drift_passes_and_dry_run_never_writes(tmp_path):
+    from tools.promote_baseline import main as promote
+
+    committed = tmp_path / "baseline.json"
+    original = baseline_from_payload(_payload(speedup=2.5))
+    committed.write_text(json.dumps(original))
+    drift = tmp_path / "payload.json"
+    drift.write_text(json.dumps(_payload(speedup=3.1)))
+    # dry run: exit 0 on wide-only drift, committed file untouched
+    assert promote([str(drift), "--baseline", str(committed)]) == 0
+    assert json.loads(committed.read_text()) == original
+    # --write promotes wide drift freely
+    assert promote([str(drift), "--baseline", str(committed),
+                    "--write"]) == 0
+    assert json.loads(committed.read_text())["fused_speedup"] == 3.1
+
+
+def test_promote_missing_committed_baseline_is_all_sharp(tmp_path):
+    from tools.promote_baseline import main as promote
+
+    payload = tmp_path / "payload.json"
+    payload.write_text(json.dumps(_payload()))
+    missing = tmp_path / "nope" / "baseline.json"
+    # everything is new -> sharp -> refused without --allow
+    assert promote([str(payload), "--baseline", str(missing)]) == 1
+    assert promote([str(payload), "--baseline", str(missing), "--write",
+                    "--allow"]) == 0
+    assert (json.loads(missing.read_text())["benchmark"]
+            == "kernel_bench_smoke_baseline")

@@ -43,6 +43,8 @@ CLI_SOURCES = {
         os.path.join(REPO, "src", "repro", "launch", "serve.py"),
     "python tools/check_docs.py":
         os.path.join(REPO, "tools", "check_docs.py"),
+    "python tools/promote_baseline.py":
+        os.path.join(REPO, "tools", "promote_baseline.py"),
 }
 
 

@@ -1,0 +1,181 @@
+"""Promote a bench run to the committed perf-regression baseline.
+
+``benchmarks/kernel_bench.py --update-baseline`` overwrites the committed
+baseline wholesale, which makes refreshes easy to rubber-stamp: a diff
+that quietly flips a *sharp* contract field (a compile-once counter, an
+obs delta, the enumerated variant count) looks exactly like routine
+timing drift in review.  This tool makes the refresh reviewable instead:
+
+* it derives the candidate baseline from a bench payload JSON (the
+  ``--json`` output of a kernel_bench run) with the same
+  ``baseline_from_payload`` the bench itself uses,
+* diffs it against the committed baseline **per gated key**, printing
+  old/new/delta and classifying every change as ``sharp`` (equality or
+  byte-exact gates: mode/backend, retrace and compiler-run counters,
+  obs deltas, ``n_variants``, slab/table byte figures) or ``wide``
+  (timing ratios the gates already tolerate drifting),
+* **refuses** to proceed when any sharp key changed unless ``--allow``
+  is passed — wide-only drift promotes freely,
+* is a dry run by default; ``--write`` actually rewrites the committed
+  file.  CI's bench-smoke job runs the dry-run form against the fresh
+  payload, so a PR that moves a sharp quantity fails the promotion
+  check with a per-key diff even before anyone tries to refresh.
+
+Usage::
+
+    python benchmarks/kernel_bench.py --smoke --json /tmp/bench.json
+    python tools/promote_baseline.py /tmp/bench.json            # dry run
+    python tools/promote_baseline.py /tmp/bench.json --write    # promote
+    python tools/promote_baseline.py /tmp/bench.json --write --allow
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+
+from benchmarks.kernel_bench import (BASELINE_PATH,  # noqa: E402
+                                     baseline_from_payload)
+
+# leaf keys whose gates are sharp (equality / byte-exact ceilings): a
+# changed value here is a behavior change, not runner noise, so
+# promotion stops without --allow.  Keys under an "obs" mapping are
+# sharp wholesale (registry-observed counter deltas are deterministic).
+SHARP_LEAVES = frozenset({
+    "mode", "backend",
+    "retraces_after_warmup", "compiler_runs_after_warmup",
+    "n_variants",
+    "table_bytes_after", "artifact_table_slab_bytes",
+    "mixed_slab_bytes", "bits_saved",
+})
+
+
+def _flatten(d: dict, prefix: str = "") -> dict:
+    """Nested dict -> {dotted.path: leaf} (leaves are non-dict values)."""
+    out = {}
+    for k, v in d.items():
+        path = f"{prefix}.{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.update(_flatten(v, path))
+        else:
+            out[path] = v
+    return out
+
+
+def _is_sharp(path: str) -> bool:
+    parts = path.split(".")
+    return parts[-1] in SHARP_LEAVES or "obs" in parts[:-1]
+
+
+def diff_baselines(committed: dict | None, candidate: dict) -> list[dict]:
+    """Per-key diff of two baseline dicts.
+
+    Returns a list of ``{"path", "kind", "old", "new", "sharp"}`` rows,
+    ``kind`` in {"added", "removed", "changed"}.  A missing committed
+    baseline makes every candidate key ``added`` (all promotion-worthy).
+    Added/removed keys are always sharp: they change the *shape* the gate
+    checks, which review must see regardless of which quantity moved.
+    """
+    old = _flatten(committed or {})
+    new = _flatten(candidate)
+    rows = []
+    for path in sorted(old.keys() | new.keys()):
+        if path not in new:
+            rows.append({"path": path, "kind": "removed",
+                         "old": old[path], "new": None, "sharp": True})
+        elif path not in old:
+            rows.append({"path": path, "kind": "added",
+                         "old": None, "new": new[path], "sharp": True})
+        elif old[path] != new[path]:
+            rows.append({"path": path, "kind": "changed",
+                         "old": old[path], "new": new[path],
+                         "sharp": _is_sharp(path)})
+    return rows
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return repr(v)
+
+
+def _describe(row: dict) -> str:
+    tag = "sharp" if row["sharp"] else "wide"
+    if row["kind"] == "changed":
+        extra = ""
+        old, new = row["old"], row["new"]
+        if (isinstance(old, (int, float)) and isinstance(new, (int, float))
+                and not isinstance(old, bool) and old):
+            extra = f" ({(new - old) / abs(old):+.1%})"
+        return (f"[{tag}] {row['path']}: {_fmt(old)} -> "
+                f"{_fmt(new)}{extra}")
+    if row["kind"] == "added":
+        return f"[{tag}] {row['path']}: (absent) -> {_fmt(row['new'])}"
+    return f"[{tag}] {row['path']}: {_fmt(row['old'])} -> (removed)"
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff a bench payload's derived baseline against the "
+                    "committed one and (optionally) promote it")
+    ap.add_argument("payload", help="bench payload JSON "
+                    "(kernel_bench --json output)")
+    ap.add_argument("--baseline", default=BASELINE_PATH, metavar="PATH",
+                    help="committed baseline to diff against and, with "
+                    f"--write, rewrite (default: {BASELINE_PATH})")
+    ap.add_argument("--write", action="store_true",
+                    help="rewrite the committed baseline on success "
+                    "(default: dry run, print the diff only)")
+    ap.add_argument("--allow", action="store_true",
+                    help="permit promotion even when sharp-gated keys "
+                    "changed (contract fields: compile-once counters, obs "
+                    "deltas, variant counts, byte figures, mode/backend)")
+    args = ap.parse_args(argv)
+
+    with open(args.payload) as f:
+        payload = json.load(f)
+    candidate = baseline_from_payload(payload)
+
+    committed = None
+    if os.path.exists(args.baseline):
+        with open(args.baseline) as f:
+            committed = json.load(f)
+    else:
+        print(f"# no committed baseline at {args.baseline} — every key "
+              "is new (sharp)")
+
+    rows = diff_baselines(committed, candidate)
+    if not rows:
+        print(f"# baseline unchanged ({args.baseline})")
+    for row in rows:
+        print(_describe(row))
+    sharp = [r for r in rows if r["sharp"]]
+    wide = [r for r in rows if not r["sharp"]]
+    print(f"# {len(rows)} key(s) differ: {len(sharp)} sharp, "
+          f"{len(wide)} wide")
+
+    if sharp and not args.allow:
+        print("# REFUSED: sharp-gated keys changed; these are contract "
+              "fields, not timing drift. Re-run with --allow after "
+              "reviewing each one above.")
+        return 1
+    if args.write:
+        base_dir = os.path.dirname(args.baseline)
+        if base_dir:
+            os.makedirs(base_dir, exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(candidate, f, indent=2)
+            f.write("\n")
+        print(f"# wrote baseline {args.baseline}")
+    else:
+        print("# dry run (no --write): committed baseline untouched")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
