@@ -23,6 +23,11 @@ dead-input pruning, cross-layer code re-encoding (level 3: a bus feature
 carrying k < 2^bw distinct codes is narrowed to ceil(log2 k) bits with
 coordinated producer/consumer rewrites), constant folding / dead-neuron
 elimination.  See pipeline.py for the level ladder.
+
+``optimize(..., synth=True)`` (or ``level=4``) appends two-level logic
+synthesis: ``repro.synth`` minimizes each surviving neuron into an SOP
+cover attached to ``res.netlist`` for assign-network Verilog emission
+and measured (rather than worst-case-bounded) LUT costing.
 """
 
 from repro.compile.ir import CLayer, CNet, CNeuron, forward_codes

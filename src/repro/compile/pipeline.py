@@ -12,6 +12,10 @@ Levels (each includes the previous):
       fixpoint: constants exposed by one round's pruning collapse further
       consumers in the next, and narrowed features hand pruning fresh
       singleton elements, until nothing changes.
+  4 — + two-level logic synthesis (alias for ``level=3, synth=True``):
+      each surviving neuron's table is minimized into an SOP cover
+      (repro.synth) over its reachable on-set, attached to the netlist
+      for the assign-network Verilog backend and measured LUT costing.
 
 The input is either a ``list[LayerTruthTable]`` (straight from
 ``logicnet.generate_tables``) or a ``Netlist`` built by
@@ -84,6 +88,10 @@ class CompileStats:
     table_bytes_after: int
     lut_cost_before: int
     lut_cost_after: int
+    # synthesize_netlist() stats dict when optimize(..., synth=True) ran
+    # (covered/fallback neuron counts, literal/term totals, seconds);
+    # None when synthesis was not requested.
+    synth: dict | None = None
 
     @property
     def dont_care_entries(self) -> int:
@@ -120,6 +128,7 @@ class CompileStats:
             "dont_care_entries": self.dont_care_entries,
             "features_recoded": self.features_recoded,
             "bits_saved": self.bits_saved,
+            "synth": self.synth,
             "passes": [p.as_dict() for p in self.passes],
         }
 
@@ -141,6 +150,7 @@ class CompileStats:
             table_bytes_after=d["table_bytes_after"],
             lut_cost_before=d["lut_cost_before"],
             lut_cost_after=d["lut_cost_after"],
+            synth=d.get("synth"),
         )
 
 
@@ -201,6 +211,7 @@ def _shape_signature(net: CNet) -> tuple:
 
 
 def optimize(netlist, level: int = 2, *,
+             synth: bool = False,
              in_features: int | None = None) -> OptimizeResult:
     """Run the pass pipeline; see module docstring for the level ladder.
 
@@ -208,9 +219,16 @@ def optimize(netlist, level: int = 2, *,
     ``build_netlist``), or a ``CNet``.  The optimized network computes the
     same function as the input on every reachable input, bit-exactly —
     per-layer, fused-kernel and Verilog lowerings included.
+
+    ``synth=True`` (or ``level=4``, an alias for ``level=3, synth=True``)
+    appends the two-level synthesis stage: ``repro.synth`` minimizes each
+    neuron's table into an SOP cover attached to ``result.netlist``, with
+    the stats recorded in ``result.stats.synth``.
     """
+    if level == 4:
+        level, synth = 3, True
     if not 0 <= level <= 3:
-        raise ValueError(f"optimize level must be in [0, 3], got {level}")
+        raise ValueError(f"optimize level must be in [0, 4], got {level}")
     net = _as_cnet(netlist, in_features)
     net.validate()
 
@@ -269,7 +287,21 @@ def optimize(netlist, level: int = 2, *,
         lut_cost_before=before_lut,
         lut_cost_after=net.lut_cost(),
     )
-    return OptimizeResult(net, stats)
+    result = OptimizeResult(net, stats)
+    if synth:
+        # the synthesis stage runs on the lowered netlist (the exact
+        # per-neuron view the Verilog backend consumes) so covers line
+        # up with the emitted modules bit-for-bit
+        from repro.synth import synthesize_netlist
+
+        t0 = time.perf_counter()
+        detail = synthesize_netlist(result.netlist)
+        seconds = time.perf_counter() - t0
+        pass_stats.append(PassStats("synth", rounds, seconds, dict(detail)))
+        _M_PASS_RUNS.labels(**{"pass": "synth"}).inc()
+        _M_PASS_SECONDS.labels(**{"pass": "synth"}).inc(seconds)
+        stats.synth = {**detail, "seconds": seconds}
+    return result
 
 
 def optimize_tables(tables: list[LayerTruthTable], level: int = 2, *,

@@ -229,10 +229,14 @@ def sparse_head_forward(cfg: LogicNetCfg, model: list[dict],
 
 def to_verilog(cfg: LogicNetCfg, model: list[dict],
                pipeline: bool = False,
-               optimize_level: int | None = None) -> dict[str, str]:
+               optimize_level: int | None = None,
+               sop: bool = False) -> dict[str, str]:
     """Generate RTL; ``optimize_level`` routes the netlist through the
     truth-table compiler first — deduped/shrunk case-statement modules with
-    don't-care entries folded into each module's ``default:`` arm."""
+    don't-care entries folded into each module's ``default:`` arm.
+    ``sop=True`` emits two-level sum-of-products assigns for neurons the
+    minimizer covered (``optimize_level=4`` attaches the covers); the rest
+    keep the case-statement form."""
     from repro.core import verilog
     tables = generate_tables(cfg, model)
     if optimize_level is not None:
@@ -241,4 +245,4 @@ def to_verilog(cfg: LogicNetCfg, model: list[dict],
                       in_features=cfg.in_features).netlist
     else:
         nl = NL.build_netlist(tables, cfg.in_features)
-    return verilog.generate_verilog(nl, pipeline)
+    return verilog.generate_verilog(nl, pipeline, sop=sop)

@@ -135,6 +135,78 @@ def netlist_lut_cost(netlist) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Measured post-synthesis cost (two-level SOP covers, repro.synth)
+# ---------------------------------------------------------------------------
+
+def sop_lut_estimate(cover, k: int = 6) -> int:
+    """k-LUT estimate for one neuron's minimized SOP cover.
+
+    Per output bit: each product term of L literals packs into an AND
+    tree of ``ceil((L-1)/(k-1))`` k-input LUTs (0 when L <= 1 — a bare
+    wire or inverter absorbs into the OR stage), then the T terms
+    combine through an OR tree of ``ceil((T-1)/(k-1))`` LUTs; a bit
+    whose whole expression fits one LUT costs 1.  The estimate is
+    clamped per bit by the worst-case ``lut_cost_per_bit`` of the bit's
+    *actual support* — two-level form can be a bad shape for LUT
+    packing (many wide terms), but a LUT never needs more than the
+    generic bound on the inputs the bit truly depends on.  Constant and
+    single-literal bits cost 0.
+    """
+    if k < 2:
+        raise ValueError(f"k-LUT packing needs k >= 2, got {k}")
+
+    def tree(n_inputs: int) -> int:
+        # LUTs to reduce n_inputs signals to 1 through k-ary nodes
+        if n_inputs <= 1:
+            return 0
+        return -(-(n_inputs - 1) // (k - 1))
+
+    total = 0
+    for b in range(cover.out_bits):
+        cubes = cover.bits[b]
+        support = len(cover.bit_support(b))
+        if support == 0:        # constant bit: a tied-off wire, no LUT
+            continue
+        lits = [c.n_literals for c in cubes]
+        if len(cubes) == 1 and lits[0] <= 1:
+            continue            # bare wire / single inverter
+        if support <= k:
+            est = 1             # whole bit fits one k-LUT
+        else:
+            est = sum(tree(n) for n in lits) + tree(len(cubes))
+            est = max(est, 1)
+        total += min(est, lut_cost_per_bit(support))
+    return total
+
+
+def netlist_sop_cost(netlist, k: int = 6) -> dict:
+    """Measured post-synthesis cost of a synthesized ``Netlist``.
+
+    Sums :func:`sop_lut_estimate` over every neuron carrying an SOP
+    cover; neurons without one (budget fallback) are priced at the
+    worst-case :func:`lut_cost` bound.  Returns the accounting dict the
+    bench reports next to the analytical bound: ``est_kluts`` (the
+    headline), ``literals`` / ``terms`` totals, and the
+    covered/fallback split.
+    """
+    est = literals = terms = 0
+    covered = fallback = 0
+    for layer in netlist.layers:
+        for n in layer:
+            if n.sop is None:
+                fallback += 1
+                est += lut_cost(max(len(n.input_bits), 1), n.out_bits)
+            else:
+                covered += 1
+                est += sop_lut_estimate(n.sop, k)
+                literals += n.sop.n_literals
+                terms += n.sop.n_terms
+    return {"est_kluts": est, "literals": literals, "terms": terms,
+            "covered_neurons": covered, "fallback_neurons": fallback,
+            "k": k}
+
+
+# ---------------------------------------------------------------------------
 # TPU-path cost model (hardware adaptation, see DESIGN.md §2)
 # ---------------------------------------------------------------------------
 

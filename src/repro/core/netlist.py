@@ -30,6 +30,11 @@ class NeuronHBB:
     out_bits: int
     table: np.ndarray         # (2^len(input_bits),) output codes
     reachable: np.ndarray | None = None   # (2^len(input_bits),) bool
+    # minimized two-level cover (repro.synth.SopCover), attached by
+    # synth.synthesize_netlist; None = unsynthesized or budget fallback.
+    # Exact on reachable entries only — may differ from `table` on
+    # don't-cares.
+    sop: object | None = None
 
     @property
     def n_entries(self) -> int:

@@ -60,6 +60,41 @@ def neuron_module(name: str, n_in_bits: int, out_bits: int,
     return "\n".join(lines)
 
 
+def neuron_module_sop(name: str, n_in_bits: int, out_bits: int,
+                      cover) -> str:
+    """One assign-network LUT module from a minimized SOP cover.
+
+    Instead of the full case statement, each output bit is an OR of
+    parenthesized AND terms over ``M0`` literals — the two-level form
+    ``repro.synth`` minimized, handed to the downstream synthesis tool as
+    explicit structure rather than a table.  Constant bits become
+    ``1'b0`` / ``1'b1``.  On don't-care (unreachable) inputs the module
+    may differ from its case-statement sibling; on reachable inputs they
+    are bit-identical (the minimizer's exactness contract).
+    """
+    lines = [f"module {name} ( input [{n_in_bits - 1}:0] M0, "
+             f"output [{out_bits - 1}:0] M1 );"]
+    for b, cubes in enumerate(cover.bits):
+        terms: list[str] | None = []
+        for c in cubes:
+            lits = c.literals()
+            if not lits:            # tautology cube: the bit is constant 1
+                terms = None
+                break
+            terms.append("(" + " & ".join(
+                ("" if positive else "~") + f"M0[{p}]"
+                for p, positive in lits) + ")")
+        if terms is None:
+            rhs = "1'b1"
+        elif not terms:
+            rhs = "1'b0"
+        else:
+            rhs = " | ".join(terms)
+        lines.append(f"  assign M1[{b}] = {rhs};")
+    lines.append("endmodule")
+    return "\n".join(lines)
+
+
 def layer_module(netlist: Netlist, layer: int) -> str:
     neurons = netlist.layers[layer]
     in_bits = (netlist.in_bits if layer == 0 else
@@ -111,15 +146,28 @@ def top_module(netlist: Netlist, pipeline: bool = False) -> str:
     return "\n".join(lines)
 
 
-def generate_verilog(netlist: Netlist, pipeline: bool = False) -> dict[str, str]:
-    """All .v sources, keyed by file name (Listing 5.2–5.6 layout)."""
+def generate_verilog(netlist: Netlist, pipeline: bool = False,
+                     sop: bool = False) -> dict[str, str]:
+    """All .v sources, keyed by file name (Listing 5.2–5.6 layout).
+
+    ``sop=True`` emits assign-network modules from the minimized covers
+    that ``compile.optimize(..., synth=True)`` attached to the netlist
+    (``NeuronHBB.sop``); neurons without a cover (synthesis budget
+    fallback, or an unsynthesized netlist) keep the case-statement form.
+    Layer/top modules are identical either way.
+    """
     files = {"LogicNetModule.v": top_module(netlist, pipeline)}
     for l, layer in enumerate(netlist.layers):
         files[f"LUTLayer{l}.v"] = layer_module(netlist, l)
         for n in layer:
             name = f"LUT_L{l}_N{n.neuron}"
-            files[f"{name}.v"] = neuron_module(
-                name, len(n.input_bits), n.out_bits, n.table, n.reachable)
+            if sop and n.sop is not None:
+                files[f"{name}.v"] = neuron_module_sop(
+                    name, len(n.input_bits), n.out_bits, n.sop)
+            else:
+                files[f"{name}.v"] = neuron_module(
+                    name, len(n.input_bits), n.out_bits, n.table,
+                    n.reachable)
     return files
 
 
@@ -129,6 +177,8 @@ def generate_verilog(netlist: Netlist, pipeline: bool = False) -> dict[str, str]
 
 _CASE_RE = re.compile(r"(\d+)'d(\d+):\s*M1\s*=\s*(\d+)'d(\d+);")
 _DEFAULT_RE = re.compile(r"default:\s*M1\s*=\s*(\d+)'d(\d+);")
+_ASSIGN_RE = re.compile(r"assign M1\[(\d+)\] = (.*);")
+_LIT_RE = re.compile(r"(~?)M0\[(\d+)\]")
 _WIDTH_RE = re.compile(r"input \[(\d+):0\] M0")
 _WIRE_RE = re.compile(
     r"wire \[(\d+):0\] (inpWire\d+_\d+) = \{([^}]*)\};")
@@ -143,6 +193,30 @@ def _parse_tables(files: dict[str, str]) -> dict[str, np.ndarray]:
         if not fname.startswith("LUT_L"):
             continue
         n_in_bits = int(_WIDTH_RE.search(text).group(1)) + 1
+        if "assign M1[" in text:
+            # SOP assign-network module: rebuild the full table by
+            # evaluating every product term, so downstream evaluation is
+            # identical to the case-statement path
+            words = np.arange(1 << n_in_bits, dtype=np.int64)
+            table = np.zeros(words.shape, dtype=np.int64)
+            for m in _ASSIGN_RE.finditer(text):
+                b, rhs = int(m.group(1)), m.group(2)
+                if rhs == "1'b0":
+                    continue
+                if rhs == "1'b1":
+                    table |= np.int64(1) << b
+                    continue
+                hit = np.zeros(words.shape, dtype=bool)
+                for term in re.findall(r"\(([^()]*)\)", rhs):
+                    mask = value = 0
+                    for neg, pos in _LIT_RE.findall(term):
+                        mask |= 1 << int(pos)
+                        if not neg:
+                            value |= 1 << int(pos)
+                    hit |= (words & mask) == value
+                table |= hit.astype(np.int64) << b
+            tables[fname[:-2]] = table
+            continue
         dm = _DEFAULT_RE.search(text)
         default = int(dm.group(2)) if dm else 0
         # every entry not listed as an explicit arm takes the default value

@@ -67,8 +67,12 @@ from repro.kernels.plan import (FUSED_VMEM_BUDGET_BYTES, FusedPlan,
 
 # format 2 (ExecutionPlan refactor): meta["plan"] is the full ExecutionPlan
 # record (variant + autotune timing table); format-1 artifacts carried the
-# bare FusedPlan and load() synthesizes their default plan
-FORMAT_VERSION = 2
+# bare FusedPlan and load() synthesizes their default plan.
+# format 3 (slab row-dedup): mixed layer_meta groups may carry a third
+# element — the per-neuron flat table offsets of shared rows — plus
+# meta["dedup_entries_saved"]; dup-free artifacts still serialize the
+# 2-element form, so they remain readable by format-2 builds
+FORMAT_VERSION = 3
 ARTIFACT_KIND = "repro.engine.CompiledLUTNet"
 
 # process-wide count of optimize() runs issued by this module; serving
@@ -281,8 +285,13 @@ class CompiledLUTNet:
                                 else list(s.out_perm))
             meta["layer_meta"] = [
                 {"n_out": m.n_out, "fan_in": m.fan_in,
-                 "groups": [[g.n_out, g.entry_bits] for g in m.groups]}
+                 # 2-element groups = legacy contiguous layout; a third
+                 # element carries the row-dedup flat offsets (format 3)
+                 "groups": [[g.n_out, g.entry_bits] if g.offs is None
+                            else [g.n_out, g.entry_bits, list(g.offs)]
+                            for g in m.groups]}
                 for m in s.meta]
+            meta["dedup_entries_saved"] = int(s.dedup_entries_saved)
         elif self.layout == "uniform":
             s = self.slabs
             arrays = {"idx_slab": s.idx_slab, "table_slab": s.table_slab}
@@ -330,8 +339,11 @@ def load(path: str) -> CompiledLUTNet:
     if layout == "mixed":
         lm = tuple(
             MixedLayerMeta(m["n_out"], m["fan_in"],
-                           tuple(MixedGroupMeta(int(n), int(e))
-                                 for n, e in m["groups"]))
+                           tuple(MixedGroupMeta(
+                               int(g[0]), int(g[1]),
+                               tuple(int(o) for o in g[2])
+                               if len(g) > 2 else None)
+                                 for g in m["groups"]))
             for m in meta["layer_meta"])
         out_perm = (None if meta["out_perm"] is None
                     else tuple(int(p) for p in meta["out_perm"]))
@@ -339,7 +351,8 @@ def load(path: str) -> CompiledLUTNet:
             jnp.asarray(arrays["idx_slab"]), jnp.asarray(arrays["shift_slab"]),
             jnp.asarray(arrays["width_slab"]),
             jnp.asarray(arrays["table_slab"]),
-            lm, out_perm, bool(meta["packed"]))
+            lm, out_perm, bool(meta["packed"]),
+            dedup_entries_saved=int(meta.get("dedup_entries_saved", 0)))
     elif layout == "uniform":
         lm = tuple(LayerMeta(*(int(v) for v in m))
                    for m in meta["layer_meta"])

@@ -319,10 +319,19 @@ def lut_network_pallas(codes: jax.Array, slabs: NetworkSlabs, *,
 
 
 class MixedGroupMeta(NamedTuple):
-    """One equal-entry-count neuron group inside a layer (static)."""
+    """One equal-entry-count neuron group inside a layer (static).
+
+    ``offs`` (static, per neuron of the group) holds each neuron's entry
+    offset into the flat table slab when row-dedup shared storage across
+    neurons — identical tables (CSE'd neurons replicated for consumers
+    in different layers, duplicated output heads, constant neurons)
+    point at one copy.  None = legacy contiguous layout: the group's
+    tables sit back-to-back at the running flat offset.
+    """
 
     n_out: int
     entry_bits: int
+    offs: tuple[int, ...] | None = None
 
 
 class MixedLayerMeta(NamedTuple):
@@ -351,6 +360,10 @@ class MixedNetworkSlabs:
     meta: tuple[MixedLayerMeta, ...]
     out_perm: tuple[int, ...] | None
     packed: bool
+    # table entries elided by build-time row dedup (identical tables
+    # share one stored copy); 0 when no duplicates existed or dedup was
+    # off — the slab arrays are then byte-identical to the legacy layout
+    dedup_entries_saved: int = 0
 
     @property
     def n_layers(self) -> int:
@@ -402,7 +415,10 @@ def estimate_mixed_slab_bytes(layers,
     three (sum O, FI_max) int32 slabs (indices, shifts, widths).  Same
     contract as ``estimate_slab_bytes``: lets the plan machinery decide
     before any slab is built, with ``pack`` forcing the on/off choice
-    (None auto-packs when every code fits a byte).
+    (None auto-packs when every code fits a byte).  The estimate is a
+    pre-dedup *upper bound*: ``build_mixed_network_slabs``'s row dedup
+    can only shrink the table slab below it (by
+    ``dedup_entries_saved`` entries), never exceed it.
     """
     o_sum = sum(L.indices.shape[0] for L in layers)
     fi_max = max(L.indices.shape[1] for L in layers)
@@ -414,8 +430,8 @@ def estimate_mixed_slab_bytes(layers,
             + entries * (1 if use_pack else 4)), use_pack, f32_exact
 
 
-def build_mixed_network_slabs(layers, *,
-                              pack: bool | None = None) -> MixedNetworkSlabs:
+def build_mixed_network_slabs(layers, *, pack: bool | None = None,
+                              dedup: bool = True) -> MixedNetworkSlabs:
     """Pack ``MixedLayerTables`` into compiler-exact fused slabs.
 
     Host-side (numpy).  Within each layer, neurons are stably sorted by
@@ -426,6 +442,16 @@ def build_mixed_network_slabs(layers, *,
     for the kernel to undo.  ``pack`` follows ``build_network_slabs``:
     None auto-packs to int8 when every code fits a byte, True validates
     the byte range and raises instead of wrapping.
+
+    ``dedup=True`` content-dedups identical table rows across the whole
+    slab: neurons with byte-identical tables (same entry count, same
+    codes) share one stored copy, with each group's per-neuron flat
+    offsets recorded in ``MixedGroupMeta.offs`` for the kernel's static
+    reconstruction.  This catches what netlist-level CSE cannot merge —
+    same-function neurons wired to *different* input indices, and
+    replicated final-layer heads — on top of compiler-merged neurons
+    whose consumers span layers.  When no duplicate exists the layout
+    (and the serialized artifact) is byte-identical to ``dedup=False``.
     """
     layers = list(layers)
     if not layers:
@@ -439,8 +465,12 @@ def build_mixed_network_slabs(layers, *,
     pack = _resolve_pack(lo >= 0 and hi < 256, pack)
 
     fi_max = max(L.indices.shape[1] for L in layers)
-    metas = []
+    layer_meta_rows = []           # (o, fi, group boundaries, flat offsets)
     idx_rows, shift_rows, width_rows, flat_parts = [], [], [], []
+    seen: dict[tuple[int, bytes], int] = {}   # table content -> flat offset
+    next_off = 0
+    entries_total = 0
+    any_dup = False
     inv_prev: np.ndarray | None = None   # prev bus: old feature -> new pos
     for L in layers:
         o = L.indices.shape[0]
@@ -454,12 +484,13 @@ def build_mixed_network_slabs(layers, *,
         shifts = np.asarray(L.shifts, dtype=np.int32)[order]
         widths = np.asarray(L.elem_widths, dtype=np.int32)[order]
         eb = eb[order]
-        groups = []
+        bounds = []
         start = 0
         for j in range(1, o + 1):
             if j == o or eb[j] != eb[start]:
-                groups.append(MixedGroupMeta(j - start, int(eb[start])))
+                bounds.append((start, j, int(eb[start])))
                 start = j
+        offs = []
         for j, src in enumerate(order):
             t = np.asarray(L.tables[src], dtype=np.int32)
             if t.shape[0] != 1 << int(eb[j]):
@@ -467,13 +498,32 @@ def build_mixed_network_slabs(layers, *,
                     f"neuron table has {t.shape[0]} entries; its element "
                     f"widths sum to {int(eb[j])} bits and require "
                     f"2^{int(eb[j])}")
-            flat_parts.append(t)
+            entries_total += t.shape[0]
+            off = seen.get((t.shape[0], t.tobytes())) if dedup else None
+            if off is None:
+                off = next_off
+                if dedup:
+                    seen[(t.shape[0], t.tobytes())] = off
+                flat_parts.append(t)
+                next_off += t.shape[0]
+            else:
+                any_dup = True
+            offs.append(off)
         pad = np.zeros((o, fi_max - fi), dtype=np.int32)
         idx_rows.append(np.concatenate([idx, pad], axis=1))
         shift_rows.append(np.concatenate([shifts, pad], axis=1))
         width_rows.append(np.concatenate([widths, pad], axis=1))
-        metas.append(MixedLayerMeta(o, fi, tuple(groups)))
+        layer_meta_rows.append((o, fi, bounds, offs))
         inv_prev = np.argsort(order)
+    # offs only materialize when a duplicate actually exists, so a
+    # dup-free build stays byte-identical (slabs, meta, artifact) to the
+    # legacy contiguous layout
+    metas = tuple(
+        MixedLayerMeta(o, fi, tuple(
+            MixedGroupMeta(e - s, ebits,
+                           tuple(offs[s:e]) if any_dup else None)
+            for s, e, ebits in bounds))
+        for o, fi, bounds, offs in layer_meta_rows)
     flat = np.concatenate(flat_parts)
     if pack:
         flat = flat.astype(np.uint8).view(np.int8)
@@ -484,7 +534,8 @@ def build_mixed_network_slabs(layers, *,
         jnp.asarray(np.concatenate(shift_rows)),
         jnp.asarray(np.concatenate(width_rows)),
         jnp.asarray(flat[None, :]),
-        tuple(metas), out_perm, bool(pack))
+        metas, out_perm, bool(pack),
+        dedup_entries_saved=entries_total - next_off)
 
 
 def _mixed_kernel(codes_ref, idx_ref, shift_ref, width_ref, table_ref,
@@ -504,15 +555,34 @@ def _mixed_kernel(codes_ref, idx_ref, shift_ref, width_ref, table_ref,
             sh = shift_ref[row:row + g.n_out, :m.fan_in]
             wd = width_ref[row:row + g.n_out, :m.fan_in]
             n_e = 1 << g.entry_bits
-            table = table_ref[0, flat:flat + g.n_out * n_e].reshape(
-                g.n_out, n_e)
+            if g.offs is None:
+                table = table_ref[0, flat:flat + g.n_out * n_e].reshape(
+                    g.n_out, n_e)
+                flat += g.n_out * n_e
+            else:
+                # row-dedup layout: per-neuron static flat offsets.
+                # Consecutive offsets (the common case — dedup leaves
+                # most runs contiguous) are merged into single slices so
+                # the unrolled program stays near the legacy size.
+                blocks = []
+                i = 0
+                while i < len(g.offs):
+                    j = i
+                    while (j + 1 < len(g.offs)
+                           and g.offs[j + 1] == g.offs[j] + n_e):
+                        j += 1
+                    blocks.append(
+                        table_ref[0, g.offs[i]:g.offs[j] + n_e].reshape(
+                            j - i + 1, n_e))
+                    i = j + 1
+                table = (blocks[0] if len(blocks) == 1
+                         else jnp.concatenate(blocks, axis=0))
             if packed:
                 table = table.astype(jnp.int32) & 0xFF
             entry = pack_fan_in_entries_mixed(h, idx, sh, wd)
             parts.append(_table_gather_two_level(entry, table,
                                                  g.entry_bits))
             row += g.n_out
-            flat += g.n_out * n_e
         h = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
     if out_perm is not None:
         # undo the final layer's group-sort: a static column shuffle

@@ -1,0 +1,25 @@
+"""Two-level logic synthesis: SOP covers over reachable on-sets.
+
+The in-repo replacement for the synthesis step the paper delegates to
+Vivado — see :mod:`repro.synth.sop` for the cover IR and
+:mod:`repro.synth.minimize` for the Quine–McCluskey minimizer.
+"""
+
+from repro.synth.minimize import (
+    DEFAULT_MAX_BITS,
+    DEFAULT_MAX_CUBES,
+    minimize_bit,
+    minimize_table,
+    synthesize_netlist,
+)
+from repro.synth.sop import Cube, SopCover
+
+__all__ = [
+    "Cube",
+    "SopCover",
+    "DEFAULT_MAX_BITS",
+    "DEFAULT_MAX_CUBES",
+    "minimize_bit",
+    "minimize_table",
+    "synthesize_netlist",
+]

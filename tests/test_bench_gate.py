@@ -23,7 +23,9 @@ from benchmarks.run_record import (build_record, record_hash,  # noqa: E402
 
 def _payload(speedup=2.5, l2_pct=17.2, l2_bytes=53912, l3_pct=17.2,
              l3_bytes=37504, l3_bits_saved=105, l3_mixed_bytes=43228,
-             l3_mixed_speedup=2.2, mode="smoke", backend="cpu",
+             l3_mixed_speedup=2.2, l3_dedup_saved=660,
+             sy_covered=159, sy_fallback=0, sy_lit_pct=81.6,
+             sy_bound_ratio=1.17, mode="smoke", backend="cpu",
              retraces=0, compiler_runs=0, artifact_bytes=37504,
              serving_speedup=50.0, tier_retraces=0, tier_compiler_runs=0,
              tier_qps=1000.0, tier_p99_ms=8.0, tier_occupancy=0.75,
@@ -47,7 +49,14 @@ def _payload(speedup=2.5, l2_pct=17.2, l2_bytes=53912, l3_pct=17.2,
                           "bits_saved": l3_bits_saved},
                 "mixed_slab_bytes": l3_mixed_bytes,
                 "mixed_fused_speedup": l3_mixed_speedup,
+                "dedup_entries_saved": l3_dedup_saved,
             },
+        },
+        "synth": {
+            "covered_neurons": sy_covered,
+            "fallback_neurons": sy_fallback,
+            "literal_reduction_pct": sy_lit_pct,
+            "bound_over_measured": sy_bound_ratio,
         },
         "serving": {
             "retraces_after_warmup": retraces,
@@ -137,6 +146,58 @@ def test_gate_tolerates_pre_mixed_baseline():
     baseline = baseline_from_payload(_payload())
     del baseline["compile"]["level3"]["mixed_slab_bytes"]
     del baseline["compile"]["level3"]["mixed_fused_speedup"]
+    assert check_against_baseline(_payload(), baseline) == []
+
+
+def test_gate_fails_when_slab_dedup_stops_sharing():
+    # the row-dedup entry count is deterministic on the generated stack:
+    # the builder silently ceasing to share (or over-sharing) is a
+    # behavior change, gated by equality
+    baseline = baseline_from_payload(_payload())
+    failures = check_against_baseline(_payload(l3_dedup_saved=0), baseline)
+    assert any("dedup_entries_saved" in f for f in failures), failures
+
+
+def test_gate_tolerates_pre_dedup_baseline():
+    baseline = baseline_from_payload(_payload())
+    del baseline["compile"]["level3"]["dedup_entries_saved"]
+    assert check_against_baseline(_payload(), baseline) == []
+
+
+def test_gate_fails_on_synth_coverage_change():
+    # a neuron falling out of the minimization budget (or a phantom
+    # neuron appearing) is sharp — the generated stack is deterministic
+    baseline = baseline_from_payload(_payload())
+    failures = check_against_baseline(
+        _payload(sy_covered=158, sy_fallback=1), baseline)
+    assert any("synth covered_neurons" in f for f in failures), failures
+    assert any("synth fallback_neurons" in f for f in failures), failures
+
+
+def test_gate_fails_on_synth_reduction_collapse():
+    # the literal-reduction floor is additive percentage points: small
+    # heuristic drift passes, losing the minimization win trips
+    baseline = baseline_from_payload(_payload(sy_lit_pct=81.6))
+    assert check_against_baseline(_payload(sy_lit_pct=80.1),
+                                  baseline) == []
+    failures = check_against_baseline(_payload(sy_lit_pct=60.0), baseline)
+    assert any("literal_reduction_pct" in f for f in failures), failures
+
+
+def test_gate_fails_when_measured_cost_exceeds_bound():
+    # the ISSUE-10 acceptance shape: the measured k-LUT estimate must
+    # beat the worst-case bound (ratio > 1), regardless of the baseline
+    baseline = baseline_from_payload(_payload())
+    failures = check_against_baseline(_payload(sy_bound_ratio=0.95),
+                                      baseline)
+    assert any("bound_over_measured" in f for f in failures), failures
+
+
+def test_gate_tolerates_pre_synth_baseline():
+    # a baseline recorded before the synth section existed must not fail
+    # the gate on the new quantities
+    baseline = baseline_from_payload(_payload())
+    del baseline["synth"]
     assert check_against_baseline(_payload(), baseline) == []
 
 
@@ -383,12 +444,22 @@ def test_committed_baseline_is_well_formed():
     assert l3["mixed_slab_bytes"] < 1.25 * l3["table_bytes_after"]
     assert l3["mixed_slab_bytes"] < comp["table_bytes_after"]
     assert l3["mixed_fused_speedup"] > 1.0
+    # slab row-dedup shares at least one entry on the generated stack
+    assert l3["dedup_entries_saved"] > 0
+    # the ISSUE-10 acceptance shape: every neuron minimized within
+    # budget, a real literal reduction, and the measured k-LUT estimate
+    # strictly below the worst-case bound
+    sy = baseline["synth"]
+    assert sy["covered_neurons"] > 0 and sy["fallback_neurons"] == 0
+    assert sy["literal_reduction_pct"] > 0.0
+    assert sy["bound_over_measured"] > 1.0
     # the compile-once serving contract: zero steady-state re-traces and
-    # compiler re-runs, artifact table slab at the level-3 byte figure
+    # compiler re-runs, artifact table slab at (or, with row-dedup,
+    # below) the level-3 byte figure
     srv = baseline["serving"]
     assert srv["retraces_after_warmup"] == 0
     assert srv["compiler_runs_after_warmup"] == 0
-    assert srv["artifact_table_slab_bytes"] == l3["table_bytes_after"]
+    assert srv["artifact_table_slab_bytes"] <= l3["table_bytes_after"]
     assert srv["serving_speedup"] > 1.0
     # the micro-batching tier: same sharp compile-once counters, sane
     # closed-loop throughput/latency/occupancy numbers
@@ -425,6 +496,11 @@ def test_committed_baseline_is_well_formed():
         l3_bits_saved=comp["level3"]["bits_saved"],
         l3_mixed_bytes=l3["mixed_slab_bytes"],
         l3_mixed_speedup=l3["mixed_fused_speedup"],
+        l3_dedup_saved=l3["dedup_entries_saved"],
+        sy_covered=sy["covered_neurons"],
+        sy_fallback=sy["fallback_neurons"],
+        sy_lit_pct=sy["literal_reduction_pct"],
+        sy_bound_ratio=sy["bound_over_measured"],
         retraces=srv["retraces_after_warmup"],
         compiler_runs=srv["compiler_runs_after_warmup"],
         artifact_bytes=srv["artifact_table_slab_bytes"],

@@ -163,7 +163,24 @@ def test_level3_fixpoint_cascades_constants():
 def test_invalid_level_rejected():
     t0 = _tt([[0, 1]], [[0]], 1, 1)
     with pytest.raises(ValueError, match="level"):
-        C.optimize([t0], level=4)
+        C.optimize([t0], level=5)
+    with pytest.raises(ValueError, match="level"):
+        C.optimize([t0], level=-1)
+
+
+def test_level4_is_synth_alias():
+    """level=4 == level=3 + synth: covers attached, stats recorded."""
+    t0 = _tt([[0, 1, 1, 0]], [[0, 1]], 1, 1)
+    res = C.optimize([t0], level=4, in_features=2)
+    assert res.stats.level == 3
+    assert res.stats.synth is not None
+    assert res.stats.synth["neurons"] == res.stats.synth["covered_neurons"]
+    assert any(n.sop is not None
+               for layer in res.netlist.layers for n in layer)
+    assert any(p.name == "synth" for p in res.stats.passes)
+    # and the stats round-trip through the artifact-metadata path
+    assert C.CompileStats.from_dict(res.stats.as_dict()).synth == \
+        res.stats.synth
 
 
 # ---------------------------------------------------------------------------

@@ -187,9 +187,12 @@ def test_fused_plan_mixed_unlocks_overflowing_stack():
     assert m_plan.fused and m_plan.layout == "mixed"
     assert m_plan.slab_bytes < u_plan.slab_bytes
 
+    # the estimate is the pre-dedup upper bound; the built slab may come
+    # in under it by exactly the shared entries (1 byte each when packed)
     est_bytes, pack, f32 = estimate_mixed_slab_bytes(mixed)
     slabs = build_mixed_network_slabs(mixed, pack=pack)
-    assert est_bytes == slabs.vmem_bytes() and pack and f32
+    assert pack and f32
+    assert est_bytes - slabs.dedup_entries_saved == slabs.vmem_bytes()
 
     codes = jnp.asarray(rng.integers(0, 2 ** bw, (9, n_in), dtype=np.int32))
     want = C.forward_codes(net, np.asarray(codes))
@@ -245,6 +248,90 @@ def test_mixed_slab_banks_compiler_bytes_on_model_a():
     got = np.asarray(lut_network_mixed_pallas(codes_in, slabs, block_b=32,
                                               interpret=True))
     np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# slab row-dedup: identical table rows stored once, indirected by offsets
+# ---------------------------------------------------------------------------
+
+
+def _duplicate_row_stack(seed=0):
+    """A stack where several neurons share identical table content."""
+    layers = _random_stack((8, 12, 6), (2, 2), (2, 2), seed=seed)
+    for li in range(len(layers)):
+        idx, tab, bw = layers[li]
+        tab = tab.copy()
+        tab[1::2] = tab[0]          # every odd neuron mirrors neuron 0
+        layers[li] = (idx, tab, bw)
+    return layers
+
+
+def test_slab_row_dedup_shares_identical_rows():
+    layers = _duplicate_row_stack(seed=6)
+    net = C.CNet.from_tables(C.tables_from_triples(layers), in_features=8)
+    mixed = net.to_mixed_tables()
+    deduped = build_mixed_network_slabs(mixed)
+    plain = build_mixed_network_slabs(mixed, dedup=False)
+    assert plain.dedup_entries_saved == 0
+    assert all(g.offs is None for m in plain.meta for g in m.groups)
+    assert deduped.dedup_entries_saved > 0
+    assert any(g.offs is not None for m in deduped.meta
+               for g in m.groups)
+    assert (deduped.vmem_breakdown()["table_slab_bytes"]
+            < plain.vmem_breakdown()["table_slab_bytes"])
+    # estimate_mixed_slab_bytes stays the pre-dedup upper bound
+    est_bytes, pack, _ = estimate_mixed_slab_bytes(mixed)
+    assert deduped.vmem_bytes() < est_bytes == plain.vmem_bytes()
+    codes = jnp.asarray(np.random.default_rng(1).integers(
+        0, 4, (17, 8), dtype=np.int32))
+    want = C.forward_codes(net, np.asarray(codes))
+    for slabs in (deduped, plain):
+        got = lut_network_mixed_pallas(codes, slabs, block_b=8,
+                                       interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_slab_dedup_noop_without_duplicates():
+    """All-or-nothing contract: a build with zero duplicate rows is
+    byte-identical to the legacy contiguous layout (offs stay None)."""
+    net = _het_fan_in_stack((10, 16, 12, 8), (2, 2, 2), (1, 2, 3), seed=3)
+    mixed = net.to_mixed_tables()
+    deduped = build_mixed_network_slabs(mixed)
+    plain = build_mixed_network_slabs(mixed, dedup=False)
+    if deduped.dedup_entries_saved == 0:
+        assert all(g.offs is None for m in deduped.meta
+                   for g in m.groups)
+        np.testing.assert_array_equal(np.asarray(deduped.table_slab),
+                                      np.asarray(plain.table_slab))
+    codes = jnp.asarray(np.random.default_rng(4).integers(
+        0, 4, (9, 10), dtype=np.int32))
+    want = C.forward_codes(net, np.asarray(codes))
+    got = lut_network_mixed_pallas(codes, deduped, block_b=4,
+                                   interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_dedup_slabs_roundtrip_engine_artifact(tmp_path):
+    """Format-3 engine artifacts persist the dedup offsets: a reloaded
+    CompiledLUTNet keeps the shared slab and stays bit-exact."""
+    from repro import engine
+
+    layers = _duplicate_row_stack(seed=11)
+    tables = C.tables_from_triples(layers)
+    net = engine.compile_network(tables, optimize_level=3, in_features=8)
+    assert net.layout == "mixed"
+    saved = net.slabs.dedup_entries_saved
+    assert saved > 0
+    path = tmp_path / "dedup_model.npz"
+    net.save(str(path))
+    fresh = engine.load(str(path))
+    assert fresh.slabs.dedup_entries_saved == saved
+    assert ([g for m in fresh.slabs.meta for g in m.groups]
+            == [g for m in net.slabs.meta for g in m.groups])
+    codes = np.random.default_rng(2).integers(0, 4, (21, 8),
+                                              dtype=np.int32)
+    np.testing.assert_array_equal(np.asarray(fresh(codes)),
+                                  np.asarray(net(codes)))
 
 
 # ---------------------------------------------------------------------------

@@ -52,6 +52,9 @@ SHARP_LEAVES = frozenset({
     "n_variants",
     "table_bytes_after", "artifact_table_slab_bytes",
     "mixed_slab_bytes", "bits_saved",
+    # slab row-dedup and two-level synthesis: deterministic structure
+    # counts on the generated stack, gated by equality
+    "dedup_entries_saved", "covered_neurons", "fallback_neurons",
 })
 
 
